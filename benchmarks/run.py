@@ -1,0 +1,50 @@
+"""Benchmark harness: one benchmark per paper table (I-V).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--tables I,IV,V]
+
+Prints one CSV-ish line per measurement.  --full runs the big systems
+(1ZE7/1AMB, minutes on CPU); default is the quick set.  TPU-side roofline
+numbers live in experiments/roofline + EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import tables as T
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--full', action='store_true')
+    ap.add_argument('--tables', default='I,II,III,IV,V')
+    args = ap.parse_args()
+    quick = not args.full
+    want = set(args.tables.upper().split(','))
+
+    fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
+           'V': T.table5}
+    failures = 0
+    for tab, fn in fns.items():
+        if tab not in want:
+            continue
+        print(f'# === Table {tab} ===', flush=True)
+        t0 = time.time()
+        try:
+            rows = fn(quick=quick)
+            for row in rows:
+                print(','.join(f'{k}={v}' for k, v in row.items()),
+                      flush=True)
+        except Exception as e:                      # pragma: no cover
+            failures += 1
+            print(f'table={tab},status=FAILED,error={e!r}', flush=True)
+        print(f'# table {tab} took {time.time() - t0:.1f}s', flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())

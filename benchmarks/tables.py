@@ -1,0 +1,230 @@
+"""Benchmark implementations, one per paper table (I-V).
+
+Each function returns a list of CSV rows (dicts); benchmarks/run.py prints
+them.  CPU wall-times here stand in for the paper's Xeon cycle counts; the
+TPU-side story lives in experiments/roofline (§Roofline of EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, repeats=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _electron_positions(sys, n=None, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n or sys.mol.n_elec
+    at = rng.integers(0, sys.mol.coords.shape[0], n)
+    return jnp.asarray(sys.mol.coords[at]
+                       + rng.normal(scale=1.2, size=(n, 3)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Table I: performance of the MO products (dense vs sparse vs kernel)
+# ---------------------------------------------------------------------------
+def table1(quick=True):
+    from repro.core import aos, mos
+    from repro.kernels.sparse_mo.ops import sparse_mo_products
+    from repro.systems.bench import paper_system
+
+    systems = ['smallest', 'b-strand'] + ([] if quick else
+                                          ['b-strand-tz', '1ze7', '1amb'])
+    rows = []
+    for name in systems:
+        s = paper_system(name)
+        A = jnp.asarray(s.mos)
+        r = _electron_positions(s)
+        B, atom_active = aos.eval_ao_block(
+            s.basis, jnp.asarray(s.mol.coords, jnp.float32), r)
+        mask = atom_active[:, jnp.asarray(s.basis.ao_atom)]
+        nnz = float(jnp.mean(mask))
+        n_orb, n_ao = A.shape
+        n_e = r.shape[0]
+        dense_flops = 2 * n_orb * n_ao * n_e * 5
+        sparse_flops = dense_flops * nnz
+
+        t_dense = _timeit(jax.jit(mos.mo_products_dense), A, B)
+        idx, valid, _ = aos.active_ao_indices(s.basis, atom_active, 512)
+        Bp = aos.pack_b(B, idx, valid)
+        t_sparse = _timeit(
+            jax.jit(lambda a, bp, ix: mos.mo_products_sparse(a, bp, ix)),
+            A, Bp, idx)
+        rows.append(dict(table='I', system=name, method='dense',
+                         time_s=round(t_dense, 4),
+                         gflops=round(dense_flops / t_dense / 1e9, 2)))
+        rows.append(dict(table='I', system=name, method='sparse-AO',
+                         time_s=round(t_sparse, 4),
+                         gflops=round(sparse_flops / t_sparse / 1e9, 2),
+                         speedup=round(t_dense / t_sparse, 2),
+                         b_density=round(nnz, 3)))
+        if quick and name == 'smallest':   # kernel interpret mode is slow
+            t_kern = _timeit(
+                jax.jit(lambda a, b, m: sparse_mo_products(
+                    a, b, m, tile_o=32, tile_k=32, tile_e=8)),
+                A, B, mask)
+            rows.append(dict(table='I', system=name, method='pallas-kernel',
+                             time_s=round(t_kern, 4),
+                             note='interpret=True (CPU validation mode)'))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table II: per-QMC-step cost breakdown + memory footprint
+# ---------------------------------------------------------------------------
+def table2(quick=True):
+    from repro.core import aos, mos, slater
+    from repro.systems.bench import paper_system
+
+    systems = ['smallest', 'b-strand'] + ([] if quick else
+                                          ['b-strand-tz', '1ze7', '1amb'])
+    rows = []
+    for name in systems:
+        s = paper_system(name)
+        A = jnp.asarray(s.mos)
+        r = _electron_positions(s)
+        B, _ = aos.eval_ao_block(
+            s.basis, jnp.asarray(s.mol.coords, jnp.float32), r)
+        n_up = s.mol.n_up
+
+        eval_ao = jax.jit(lambda rr: aos.eval_ao_block(
+            s.basis, jnp.asarray(s.mol.coords, jnp.float32), rr)[0])
+        prod = jax.jit(mos.mo_products_dense)
+        inv = jax.jit(lambda C: jnp.linalg.inv(C[:n_up, :n_up, 0]))
+
+        t_ao = _timeit(eval_ao, r)
+        C = prod(A, B)
+        t_prod = _timeit(prod, A, B)
+        t_inv = _timeit(inv, C)
+        total = t_ao + t_prod + t_inv
+        # memory footprint: parameters + one walker's work set
+        mem = (A.size * 4 + B.size * 4 + C.size * 4
+               + 2 * n_up * n_up * 4) / 2 ** 20
+        rows.append(dict(
+            table='II', system=name, n_elec=s.mol.n_elec,
+            step_s=round(total, 4), ao_pct=round(100 * t_ao / total, 1),
+            products_pct=round(100 * t_prod / total, 1),
+            inversion_pct=round(100 * t_inv / total, 1),
+            ram_mib=round(mem, 1)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table III: spline interpolation vs direct computation
+# ---------------------------------------------------------------------------
+def table3(quick=True):
+    from repro.core import aos, mos, spline
+    from repro.systems.molecule import build_wavefunction, water
+    from repro.systems.bench import paper_system, build_bench_wavefunction
+
+    rows = []
+    # water (exact MOs) + smallest bench system
+    mol, shells = water()
+    cfg, params = build_wavefunction(mol, shells, method='dense')
+    grid = spline.build_mo_grid(cfg.basis, params.coords, params.mo,
+                                (40, 40, 40))
+    r = jax.random.normal(jax.random.PRNGKey(0), (mol.n_elec, 3)) * 1.2
+    interp = jax.jit(lambda rr: spline.interp_mo_block(grid, rr))
+    direct = jax.jit(lambda rr: mos.mo_products_dense(
+        params.mo, aos.eval_ao_block(cfg.basis, params.coords, rr)[0]))
+    t_i = _timeit(interp, r)
+    t_d = _timeit(direct, r)
+    rows.append(dict(table='III', system='water', direct_s=round(t_d, 5),
+                     spline_s=round(t_i, 5),
+                     ratio=round(t_d / t_i, 2),
+                     spline_mem_mib=round(grid.memory_bytes / 2 ** 20, 1),
+                     direct_mem_mib=round(params.mo.size * 4 / 2 ** 20, 2)))
+    if not quick:
+        s = paper_system('smallest')
+        cfgb, pb = build_bench_wavefunction(s, method='dense')
+        grid_b = spline.build_mo_grid(s.basis, pb.coords, pb.mo,
+                                      (48, 48, 48))
+        rb = _electron_positions(s)
+        interp_b = jax.jit(lambda rr: spline.interp_mo_block(grid_b, rr))
+        direct_b = jax.jit(lambda rr: mos.mo_products_dense(
+            pb.mo, aos.eval_ao_block(s.basis, pb.coords, rr)[0]))
+        t_ib = _timeit(interp_b, rb)
+        t_db = _timeit(direct_b, rb)
+        rows.append(dict(table='III', system='smallest',
+                         direct_s=round(t_db, 5), spline_s=round(t_ib, 5),
+                         ratio=round(t_db / t_ib, 2),
+                         spline_mem_mib=round(grid_b.memory_bytes / 2 ** 20,
+                                              1)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IV: sparsity of A (MO coeffs) and B (AO values)
+# ---------------------------------------------------------------------------
+def table4(quick=True):
+    from repro.core import aos
+    from repro.systems.bench import paper_system
+
+    paper_vals = {'smallest': (81.3, 36.2, 146), 'b-strand': (48.4, 14.8,
+                                                              142),
+                  'b-strand-tz': (73.4, 8.2, 241), '1ze7': (49.4, 5.7, 135),
+                  '1amb': (37.1, 3.9, 152)}
+    systems = list(paper_vals) if not quick else ['smallest', 'b-strand',
+                                                  '1ze7']
+    rows = []
+    for name in systems:
+        s = paper_system(name)
+        r = _electron_positions(s)
+        _, atom_active = aos.eval_ao_block(
+            s.basis, jnp.asarray(s.mol.coords, jnp.float32), r)
+        mask = atom_active[:, jnp.asarray(s.basis.ao_atom)]
+        counts = np.asarray(jnp.sum(mask, 1))
+        pa, pb, pk = paper_vals[name]
+        rows.append(dict(
+            table='IV', system=name, n_elec=s.mol.n_elec,
+            n_basis=s.basis.n_ao,
+            a_nonzero_pct=round(100 * s.a_density, 1),
+            paper_a_pct=pa,
+            b_nonzero_pct=round(100 * float(jnp.mean(mask)), 1),
+            paper_b_pct=pb,
+            avg_active_ao=int(counts.mean()), paper_k=pk,
+            max_active_ao=int(counts.max())))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table V: parallel speed-up of the block runtime (forwarder tree)
+# ---------------------------------------------------------------------------
+def table5(quick=True):
+    import repro.runtime as rt
+    from tests.test_runtime import FakeSampler
+
+    duration = 1.5 if quick else 4.0
+    counts = [1, 2, 4, 8] if quick else [1, 2, 4, 8, 16, 32]
+    base = None
+    rows = []
+    for n in counts:
+        cfg = rt.RunConfig(n_workers=n, wall_clock_limit=duration,
+                           poll_interval=0.05, subblocks_per_block=2)
+        # sleep-bound fake sampler: models the GIL-free XLA compute of a
+        # real worker so thread-level scaling is measurable on one core
+        mgr = rt.QMCManager(FakeSampler(delay=0.01), f'tab5-{n}', cfg)
+        t0 = time.monotonic()
+        avg = mgr.run()
+        wall = time.monotonic() - t0
+        rate = avg.n_blocks / wall
+        if base is None:
+            base = rate
+        rows.append(dict(table='V', workers=n,
+                         blocks=avg.n_blocks,
+                         blocks_per_s=round(rate, 1),
+                         speedup=round(rate / base, 2),
+                         efficiency=round(rate / base / n, 3)))
+    return rows

@@ -1,0 +1,63 @@
+"""Quickstart: VMC + DMC on real molecules with the sparse-AO hot path.
+
+Runs in ~2 minutes on one CPU core:
+  1. build an H2O trial wavefunction (core-Hamiltonian MOs + Jastrow);
+  2. VMC-equilibrate a walker population and measure <E_L>;
+  3. run fixed-node DMC with constant-population reconfiguration;
+  4. verify the paper's three MO-product paths (dense O(N^3) oracle,
+     sparse-AO gather, Pallas tile-sparse kernel) agree bitwise-ish.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dmc import init_dmc, make_dmc_block, update_e_trial
+from repro.core.vmc import init_walkers, make_vmc_block
+from repro.core.wavefunction import psi_state
+from repro.systems.molecule import build_wavefunction, water
+
+
+def main():
+    print('== building H2O trial wavefunction (STO-3G, core guess + Jastrow)')
+    cfg, params = build_wavefunction(*water(), method='dense')
+
+    print('== method consistency: dense / sparse-AO / Pallas kernel')
+    r = jax.random.normal(jax.random.PRNGKey(0), (cfg.n_elec, 3)) * 1.2
+    for method, kw in [('dense', {}), ('sparse', {'k_max': 16}),
+                       ('kernel', {'kernel_tiles': (8, 8, 8)})]:
+        c = dataclasses.replace(cfg, method=method, **kw)
+        st = psi_state(c, params, r)
+        print(f'   {method:6s}: E_L = {float(st.e_loc):+.6f}')
+
+    print('== VMC (256 walkers, 3 blocks x 60 steps)')
+    key = jax.random.PRNGKey(1)
+    ens = init_walkers(cfg, params, key, 256)
+    vblk = make_vmc_block(cfg, steps=60, tau=0.25)
+    for i in range(3):
+        ens, stats = vblk(params, ens, jax.random.PRNGKey(10 + i))
+        print(f'   block {i}: E = {float(stats.e_mean):+.4f}  '
+              f'accept = {float(stats.accept):.2f}')
+    e_vmc = float(stats.e_mean)
+
+    print('== FN-DMC (constant population, reconfiguration)')
+    st = init_dmc(ens, e_trial=e_vmc)
+    dblk = make_dmc_block(cfg, steps=60, tau=0.01)
+    st, _ = dblk(params, st, jax.random.PRNGKey(42))      # equilibrate
+    es = []
+    for i in range(4):
+        st, ds = dblk(params, st, jax.random.PRNGKey(100 + i))
+        st = update_e_trial(st, ds.e_mean)
+        es.append(float(ds.e_mean))
+        print(f'   block {i}: E = {es[-1]:+.4f}  '
+              f'accept = {float(ds.accept):.3f}')
+    print(f'== E(VMC) = {e_vmc:+.4f}   E(DMC) = {np.mean(es):+.4f} '
+          f'+/- {np.std(es) / np.sqrt(len(es)):.4f}  '
+          '(DMC lowers the variational energy)')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,46 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``config()`` (the exact published dims) and
+``smoke_config()`` (a reduced same-family config for CPU tests).
+Select with ``--arch <id>`` in the launchers.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    'llava_next_mistral_7b',
+    'yi_6b',
+    'granite_20b',
+    'qwen2_5_32b',
+    'stablelm_1_6b',
+    'hymba_1_5b',
+    'rwkv6_3b',
+    'mixtral_8x7b',
+    'deepseek_moe_16b',
+    'musicgen_medium',
+]
+
+# canonical dashed ids (CLI) -> module names
+ALIASES = {a.replace('_', '-'): a for a in ARCH_IDS}
+ALIASES.update({
+    'llava-next-mistral-7b': 'llava_next_mistral_7b',
+    'qwen2.5-32b': 'qwen2_5_32b',
+    'stablelm-1.6b': 'stablelm_1_6b',
+    'hymba-1.5b': 'hymba_1_5b',
+    'deepseek-moe-16b': 'deepseek_moe_16b',
+})
+
+
+def get_config(arch: str, smoke: bool = False, **overrides):
+    mod_name = ALIASES.get(arch, arch.replace('-', '_').replace('.', '_'))
+    mod = importlib.import_module(f'repro.configs.{mod_name}')
+    cfg = mod.smoke_config() if smoke else mod.config()
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg.check()
+
+
+def all_arch_ids() -> list[str]:
+    return [a.replace('_', '-') for a in ARCH_IDS]

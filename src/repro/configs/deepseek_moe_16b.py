@@ -1,0 +1,29 @@
+"""DeepSeekMoE-16B [moe]: fine-grained experts, 2 shared + 64 routed top-6.
+28L d2048 16H (kv=16, MHA) expert-ff 1408 v102400.  [arXiv:2401.06066; hf]
+
+64 experts divide the 16-way model axis exactly: expert-parallel (4 experts
+per shard), shared experts TP-sharded like a dense MLP.
+Deviation: the published model's first layer is a dense FFN; here all
+layers are MoE for scan uniformity (DESIGN.md §6).
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='deepseek-moe-16b', family='moe',
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1408, vocab=102400, head_dim=128, rope_theta=1e4,
+        moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, d_expert=1408),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='deepseek-smoke', family='moe',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=64, vocab=512, head_dim=32, rope_theta=1e4,
+        moe=MoEConfig(n_experts=8, top_k=3, n_shared=1, d_expert=64,
+                      capacity_factor=4.0),   # drop-free at smoke scale
+        model_axis=1,
+    )

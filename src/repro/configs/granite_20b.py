@@ -1,0 +1,20 @@
+"""Granite-20B (code) [dense]: llama-arch with MQA (kv=1).
+52L d6144 48H ff24576 v49152.  [arXiv:2405.04324; hf]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='granite-20b', family='dense',
+        n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1,
+        d_ff=24576, vocab=49152, head_dim=128, rope_theta=1e4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='granite-smoke', family='dense',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=1,
+        d_ff=256, vocab=512, head_dim=32, rope_theta=1e4, model_axis=1,
+    )

@@ -1,0 +1,30 @@
+"""Hymba-1.5B [hybrid]: parallel attention + Mamba heads in every layer.
+32L d1600 25H (kv=5) ff5504 v32001, ssm_state=16, head_dim 64.
+SWA(1024) everywhere except periodic global-attention layers.
+[arXiv:2411.13676; hf]
+
+Deviations (DESIGN.md §6): branch fusion is mean-of-normalized-branches
+ahead of a shared output projection; decode runs all layers windowed.
+25 heads pad to 32 on the 16-way model axis; kv=5 replicates.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='hymba-1.5b', family='hybrid',
+        n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+        d_ff=5504, vocab=32001, head_dim=64,
+        seq_mixer='hybrid', ssm_state=16,
+        window=1024, global_layer_every=16, rope_theta=1e4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='hymba-smoke', family='hybrid',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512, head_dim=32,
+        seq_mixer='hybrid', ssm_state=8,
+        window=32, global_layer_every=2, rope_theta=1e4, model_axis=1,
+    )

@@ -1,0 +1,29 @@
+"""LLaVA-NeXT (Mistral-7B backbone) [vlm].
+
+Backbone only per the assignment: 32L d4096 32H (GQA kv=8) ff14336 v32000,
+Mistral sliding window 4096.  The anyres vision tower is a STUB —
+``input_specs`` provides 576 precomputed patch embeddings (one 336px image
+at base resolution) as ``prefix_embeds``.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='llava-next-mistral-7b', family='vlm',
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=32000, head_dim=128,
+        window=4096, rope_theta=1e6,
+        n_prefix_tokens=576,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='llava-smoke', family='vlm',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512, head_dim=32,
+        window=32, rope_theta=1e4,
+        n_prefix_tokens=8, model_axis=1,
+    )

@@ -1,0 +1,29 @@
+"""Mixtral-8x7B [moe]: 8 experts top-2, sliding-window attention.
+32L d4096 32H (kv=8) expert-ff 14336 v32000.  [arXiv:2401.04088; hf]
+
+8 experts on a 16-way model axis: experts are TP-sharded inside
+(hidden 14336/16 = 896 per shard) rather than EP — see models/moe.py.
+"""
+from repro.models.config import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='mixtral-8x7b', family='moe',
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=14336, vocab=32000, head_dim=128,
+        window=4096, rope_theta=1e6,
+        moe=MoEConfig(n_experts=8, top_k=2),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='mixtral-smoke', family='moe',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512, head_dim=32,
+        window=32, rope_theta=1e4,
+        # capacity 4.0: drop-free at smoke scale so decode == prefill exactly
+        moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=4.0),
+        model_axis=1,
+    )

@@ -1,0 +1,27 @@
+"""MusicGen-medium [audio]: decoder-only over EnCodec tokens.
+48L d1536 24H (kv=24, MHA) ff6144 v2048, 4 codebooks (delay pattern).
+[arXiv:2306.05284; hf]
+
+The EnCodec frontend is a STUB: ``input_specs`` provides the 4-codebook
+token grid directly (B, S, 4); embeddings are summed per step and 4
+parallel heads predict the delayed codebooks.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='musicgen-medium', family='audio',
+        n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24,
+        d_ff=6144, vocab=2048, head_dim=64, rope_theta=1e4,
+        n_codebooks=4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='musicgen-smoke', family='audio',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=256, head_dim=32, rope_theta=1e4,
+        n_codebooks=2, model_axis=1,
+    )

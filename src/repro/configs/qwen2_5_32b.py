@@ -1,0 +1,25 @@
+"""Qwen2.5-32B [dense]: GQA with QKV bias.
+64L d5120 40H (kv=8) ff27648 v152064.  [hf:Qwen/Qwen2.5-0.5B; hf]
+
+40 query heads on a 16-way model axis: padded to 48 (zero wo rows), the
+Megatron head-padding answer — see config.py.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='qwen2.5-32b', family='dense',
+        n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8,
+        d_ff=27648, vocab=152064, head_dim=128,
+        qkv_bias=True, rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='qwen-smoke', family='dense',
+        n_layers=2, d_model=128, n_heads=5, n_kv_heads=1,
+        d_ff=256, vocab=512, head_dim=32,
+        qkv_bias=True, rope_theta=1e4, model_axis=1,
+    )

@@ -1,0 +1,24 @@
+"""RWKV6-3B "Finch" [ssm]: attention-free, data-dependent per-channel decay.
+32L d2560 ff8960 v65536.  [arXiv:2404.05892; hf]
+
+Heads are d_model/64 = 40, padded to 48 on the 16-way model axis.
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='rwkv6-3b', family='ssm',
+        n_layers=32, d_model=2560, n_heads=0, n_kv_heads=0,
+        d_ff=8960, vocab=65536, head_dim=64,
+        seq_mixer='rwkv6',
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='rwkv6-smoke', family='ssm',
+        n_layers=2, d_model=128, n_heads=0, n_kv_heads=0,
+        d_ff=256, vocab=512, head_dim=64,
+        seq_mixer='rwkv6', model_axis=1,
+    )

@@ -1,0 +1,21 @@
+"""StableLM-2-1.6B [dense]: MHA (kv == heads).
+24L d2048 32H (kv=32) ff5632 v100352, head_dim 64.
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='stablelm-1.6b', family='dense',
+        n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=5632, vocab=100352, head_dim=64, rope_theta=1e4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='stablelm-smoke', family='dense',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=512, head_dim=32, rope_theta=1e4, model_axis=1,
+    )

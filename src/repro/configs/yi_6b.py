@@ -1,0 +1,20 @@
+"""Yi-6B [dense]: llama-arch GQA.  32L d4096 32H (kv=4) ff11008 v64000.
+[arXiv:2403.04652; hf]
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name='yi-6b', family='dense',
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+        d_ff=11008, vocab=64000, head_dim=128, rope_theta=5e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name='yi-smoke', family='dense',
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab=512, head_dim=32, rope_theta=1e4, model_axis=1,
+    )

@@ -1,0 +1,149 @@
+"""Atomic-orbital evaluation: values, gradients, Laplacians + sparsity lists.
+
+Produces the paper's B matrices:
+    B1[j, i] = chi_j(r_i)            (values)
+    B2..B4   = d chi_j / dx,dy,dz    (gradients)
+    B5       = laplacian chi_j       (Laplacians)
+stacked as ``B: (n_ao, n_elec, 5)``, plus the per-electron *active AO* index
+lists that make B sparse (paper §III: AOs whose spherical part is < EPS are
+exact zeros; whole atoms are skipped via the atomic radius).
+
+Everything is analytic; ``tests/test_aos.py`` checks value/grad/lap against a
+jax autodiff oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .basis import BasisSet, EPS_AO, MAX_POW
+
+
+def _monomial_1d(x: jnp.ndarray, n: jnp.ndarray):
+    """f(x)=x^n and df, d2f for integer n in [0, MAX_POW].
+
+    x: (..., n_ao) floats, n: (n_ao,) int32 broadcast along leading dims.
+    Returns (f, df, d2f), each (..., n_ao); derivative factors are exact for
+    n==0/1 (coefficients vanish rather than evaluating negative powers).
+    """
+    # powers[k] = x^k, k = 0..MAX_POW
+    powers = [jnp.ones_like(x)]
+    for _ in range(MAX_POW):
+        powers.append(powers[-1] * x)
+    powers = jnp.stack(powers, axis=-1)  # (..., n_ao, MAX_POW+1)
+    nf = n.astype(x.dtype)
+
+    def take(k):  # x^{clip(n+k, 0)} via clamped table lookup
+        kk = jnp.clip(n + k, 0, MAX_POW)
+        kk = jnp.broadcast_to(kk, x.shape)[..., None]
+        return jnp.take_along_axis(powers, kk, axis=-1)[..., 0]
+
+    f = take(0)
+    df = nf * take(-1)
+    d2f = nf * (nf - 1.0) * take(-2)
+    return f, df, d2f
+
+
+def eval_ao_block(basis: BasisSet, coords: jnp.ndarray, r_elec: jnp.ndarray):
+    """Evaluate all AOs at electron positions.
+
+    Args:
+      basis: BasisSet (host numpy arrays; closed over as constants).
+      coords: (n_atoms, 3) nuclear positions.
+      r_elec: (n_e, 3) electron positions (n_e may be a chunk).
+
+    Returns:
+      B: (n_ao, n_e, 5) float32 — value, ddx, ddy, ddz, laplacian.
+      atom_active: (n_e, n_atoms) bool — electron within atomic radius.
+    """
+    ao_atom = jnp.asarray(basis.ao_atom)
+    ao_pow = jnp.asarray(basis.ao_pow)            # (n_ao, 3)
+    prim_c = jnp.asarray(basis.prim_coeff)        # (n_ao, P)
+    prim_a = jnp.asarray(basis.prim_exp)          # (n_ao, P)
+    radius2 = jnp.asarray(basis.atom_radius2)     # (n_atoms,)
+
+    dxyz_at = r_elec[:, None, :] - coords[None, :, :]        # (n_e, n_at, 3)
+    r2_at = jnp.sum(dxyz_at * dxyz_at, axis=-1)              # (n_e, n_at)
+    atom_active = r2_at < radius2[None, :]
+
+    d = dxyz_at[:, ao_atom, :]                               # (n_e, n_ao, 3)
+    r2 = r2_at[:, ao_atom]                                   # (n_e, n_ao)
+
+    # Radial part and its radial derivatives:
+    #   g   = sum_k c_k e^{-a_k r^2}
+    #   gp  = dg/d(r^2) = sum_k -a_k c_k e^{-a_k r^2}
+    #   gpp = d2g/d(r^2)^2
+    expo = jnp.exp(-prim_a[None] * r2[..., None])            # (n_e, n_ao, P)
+    g = jnp.sum(prim_c[None] * expo, axis=-1)
+    gp = jnp.sum(-prim_a[None] * prim_c[None] * expo, axis=-1)
+    gpp = jnp.sum(prim_a[None] ** 2 * prim_c[None] * expo, axis=-1)
+
+    # Angular monomial factors per coordinate.
+    fs, dfs, d2fs = [], [], []
+    for l in range(3):
+        f, df, d2f = _monomial_1d(d[..., l], ao_pow[:, l])
+        fs.append(f); dfs.append(df); d2fs.append(d2f)
+    poly = fs[0] * fs[1] * fs[2]                              # (n_e, n_ao)
+
+    # chi = poly * g;  d chi/dx = df_x f_y f_z g + poly * 2 x gp
+    val = poly * g
+    grads = []
+    for l in range(3):
+        others = fs[(l + 1) % 3] * fs[(l + 2) % 3]
+        grads.append(dfs[l] * others * g + poly * 2.0 * d[..., l] * gp)
+    # laplacian: sum_l [ d2f_l*others*g + 2 df_l*others*2x gp
+    #                    + poly*(2 gp + 4 x^2 gpp) ]
+    lap = jnp.zeros_like(val)
+    for l in range(3):
+        others = fs[(l + 1) % 3] * fs[(l + 2) % 3]
+        x = d[..., l]
+        lap = lap + (d2fs[l] * others * g
+                     + 2.0 * dfs[l] * others * 2.0 * x * gp
+                     + poly * (2.0 * gp + 4.0 * x * x * gpp))
+
+    B = jnp.stack([val] + grads + [lap], axis=-1)            # (n_e, n_ao, 5)
+    # screening: exact zeros outside the atomic radius (paper's sparsity)
+    active = atom_active[:, ao_atom]                         # (n_e, n_ao)
+    B = jnp.where(active[..., None], B, 0.0)
+    return jnp.transpose(B, (1, 0, 2)), atom_active
+
+
+def active_ao_indices(basis: BasisSet, atom_active: jnp.ndarray, k_max: int):
+    """Per-electron padded active-AO index lists (paper's ``indices`` array).
+
+    Args:
+      atom_active: (n_e, n_atoms) bool.
+      k_max: pad/truncate length (multiple of 128 for the TPU kernel).
+
+    Returns:
+      idx: (n_e, k_max) int32 — active AO indices, ascending, padded with 0.
+      valid: (n_e, k_max) bool — padding mask.
+      count: (n_e,) int32 — true number of active AOs (may exceed k_max:
+        callers assert/monitor overflow; the dense path is exact regardless).
+    """
+    ao_atom = jnp.asarray(basis.ao_atom)
+    mask = atom_active[:, ao_atom]                            # (n_e, n_ao)
+    count = jnp.sum(mask.astype(jnp.int32), axis=-1)
+    n_ao = mask.shape[-1]
+    # stable argsort of (~mask) puts active AOs first, in ascending AO order —
+    # the paper sorts columns by first active index for cache blocking; here
+    # ascending order maximizes tile density in the Pallas kernel.
+    order = jnp.argsort(jnp.where(mask, 0, 1), axis=-1, stable=True)
+    k = min(k_max, n_ao)
+    idx = order[:, :k].astype(jnp.int32)
+    if k < k_max:  # basis smaller than pad width
+        idx = jnp.pad(idx, ((0, 0), (0, k_max - k)))
+    valid = jnp.arange(k_max)[None, :] < jnp.minimum(count, k_max)[:, None]
+    idx = jnp.where(valid, idx, 0)
+    return idx, valid, count
+
+
+def pack_b(B: jnp.ndarray, idx: jnp.ndarray, valid: jnp.ndarray):
+    """Gather B rows into the packed per-electron representation.
+
+    B: (n_ao, n_e, 5) -> Bp: (n_e, k_max, 5) with zeros at padding.
+    """
+    n_e = B.shape[1]
+    Bp = B[idx, jnp.arange(n_e)[:, None], :]                 # (n_e, k, 5)
+    return jnp.where(valid[..., None], Bp, 0.0)

@@ -1,0 +1,116 @@
+"""Fixed-node DMC with constant-walker-count stochastic reconfiguration.
+
+Per generation (paper §II):
+  1. drift-diffusion move (eq. 1) with Metropolis accept/reject on |Psi|^2 G
+     (Umrigar '93) — removes most time-step error;
+  2. fixed-node constraint: moves that flip sign(Psi_T) are rejected
+     (nodes act as infinite barriers);
+  3. branching weight w = exp(-tau_eff/2 [(E_L(R')-E_T) + (E_L(R)-E_T)])
+     (eq. 3);
+  4. reconfiguration (reconfig.py) keeps the population size constant;
+     the population-mean weight enters the trailing global weight
+     Pi_t = prod_{s in window} w_bar_s, which weights the energy estimator
+     (removes the finite-population bias, ref. [17]).
+
+The whole block is one jit'd lax.scan — zero host sync inside a block.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .reconfig import reconfigure, global_weight_update
+from .vmc import WalkerEnsemble, _evaluate, _log_green
+from .wavefunction import WavefunctionConfig, WavefunctionParams
+
+
+class DMCState(NamedTuple):
+    ens: WalkerEnsemble
+    log_w_hist: jnp.ndarray    # (window,) trailing log population weights
+    e_trial: jnp.ndarray       # () E_T reference energy
+
+
+class DMCBlockStats(NamedTuple):
+    e_mean: jnp.ndarray        # global-weighted mixed estimator
+    e2_mean: jnp.ndarray
+    weight: jnp.ndarray        # sum of global weights (normalization)
+    accept: jnp.ndarray
+    pop_weight: jnp.ndarray    # mean population weight (E_T feedback signal)
+    sign_flips: jnp.ndarray    # fraction of proposed node crossings
+
+
+def dmc_step(cfg, params, state: DMCState, key, tau):
+    ens = state.ens
+    kp, ka, kr = jax.random.split(key, 3)
+    eta = jax.random.normal(kp, ens.r.shape, dtype=ens.r.dtype)
+    r_new = ens.r + tau * ens.drift + jnp.sqrt(tau) * eta
+    new, _ = _evaluate(cfg, params, r_new)
+
+    crossed = new.sign * ens.sign < 0          # fixed-node: reject crossings
+    log_ratio = (2.0 * (new.log_psi - ens.log_psi)
+                 + _log_green(ens.r, r_new, new.drift, tau)
+                 - _log_green(r_new, ens.r, ens.drift, tau))
+    metro = jnp.log(jax.random.uniform(ka, log_ratio.shape)) < log_ratio
+    accept = metro & ~crossed
+    pick = lambda a, b: jnp.where(
+        accept.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+    moved = WalkerEnsemble(*(pick(a, b) for a, b in zip(new, ens)))
+
+    # effective time step compensates rejected moves (Umrigar '93)
+    acc_frac = jnp.mean(accept.astype(tau.dtype if hasattr(tau, 'dtype')
+                                      else jnp.float32))
+    tau_eff = tau * jnp.maximum(acc_frac, 1e-3)
+    w = jnp.exp(-0.5 * tau_eff *
+                (moved.e_loc + ens.e_loc - 2.0 * state.e_trial))
+    w = jnp.clip(w, 0.0, 4.0)                  # guard rare E_L spikes
+
+    idx = reconfigure(kr, w)
+    ens_next = jax.tree.map(lambda a: a[idx], moved)
+    log_hist, g_weight = global_weight_update(state.log_w_hist, jnp.mean(w))
+    out = (jnp.mean(moved.e_loc), g_weight, acc_frac,
+           jnp.mean(crossed.astype(jnp.float32)), jnp.mean(w))
+    return DMCState(ens=ens_next, log_w_hist=log_hist,
+                    e_trial=state.e_trial), out
+
+
+def dmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
+              state: DMCState, key: jax.Array, steps: int, tau: float):
+    """One DMC block (jit-able): scan of dmc_step + weighted averages."""
+
+    def body(st, k):
+        st2, out = dmc_step(cfg, params, st, k, tau)
+        return st2, out
+
+    keys = jax.random.split(key, steps)
+    state_out, (e_hist, gw_hist, acc_hist, cross_hist, w_hist) = \
+        jax.lax.scan(body, state, keys)
+    wsum = jnp.sum(gw_hist)
+    e_mean = jnp.sum(gw_hist * e_hist) / wsum
+    e2_mean = jnp.sum(gw_hist * e_hist ** 2) / wsum
+    stats = DMCBlockStats(
+        e_mean=e_mean, e2_mean=e2_mean, weight=wsum,
+        accept=jnp.mean(acc_hist), pop_weight=jnp.mean(w_hist),
+        sign_flips=jnp.mean(cross_hist))
+    return state_out, stats
+
+
+def init_dmc(ens: WalkerEnsemble, e_trial: float,
+             window: int = 20) -> DMCState:
+    return DMCState(ens=ens,
+                    log_w_hist=jnp.zeros((window,), jnp.float32),
+                    e_trial=jnp.float32(e_trial))
+
+
+def make_dmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
+    fn = partial(dmc_block, cfg)
+    return jax.jit(lambda params, st, key: fn(params, st, key, steps, tau))
+
+
+def update_e_trial(state: DMCState, e_estimate, damping: float = 0.5):
+    """Between-block E_T feedback (population control is already exact;
+    this just keeps weights O(1))."""
+    et = (1 - damping) * state.e_trial + damping * e_estimate
+    return state._replace(e_trial=jnp.float32(et))

@@ -1,0 +1,29 @@
+"""Coulomb potential terms of the molecular Hamiltonian (Born–Oppenheimer).
+
+    V(R) = - sum_{i,a} Z_a / r_ia  +  sum_{i<j} 1 / r_ij  +  sum_{a<b} Z_a Z_b / R_ab
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def potential_energy(r_elec: jnp.ndarray, coords: jnp.ndarray,
+                     charges: jnp.ndarray) -> jnp.ndarray:
+    n_e = r_elec.shape[0]
+    eye = jnp.eye(n_e, dtype=bool)
+
+    dn = r_elec[:, None, :] - coords[None, :, :]
+    r_en = jnp.sqrt(jnp.sum(dn * dn, axis=-1) + 1e-20)
+    v_en = -jnp.sum(charges[None, :] / r_en)
+
+    de = r_elec[:, None, :] - r_elec[None, :, :]
+    r_ee = jnp.sqrt(jnp.sum(de * de, axis=-1) + jnp.where(eye, 1.0, 0.0))
+    v_ee = 0.5 * jnp.sum(jnp.where(eye, 0.0, 1.0 / r_ee))
+
+    da = coords[:, None, :] - coords[None, :, :]
+    n_a = coords.shape[0]
+    eye_a = jnp.eye(n_a, dtype=bool)
+    r_aa = jnp.sqrt(jnp.sum(da * da, axis=-1) + jnp.where(eye_a, 1.0, 0.0))
+    v_nn = 0.5 * jnp.sum(jnp.where(eye_a, 0.0,
+                                   charges[:, None] * charges[None, :] / r_aa))
+    return v_en + v_ee + v_nn

@@ -1,0 +1,85 @@
+"""Jastrow factor J(R) (eq. 7): Padé e-e and e-n terms, analytic derivatives.
+
+    U_ee(r)  = a_ee * r / (1 + b_ee * r)     (a_ee enforces the cusp:
+                                              0.5 anti-parallel, 0.25 parallel)
+    U_en(r)  = -Z_alpha * a_en * r / (1 + b_en * r)
+
+Returns per-electron gradient and Laplacian of J so the local energy can be
+assembled without autodiff (autodiff is the test oracle, not the hot path).
+
+For a pair function u(r), with rhat = (r_i - r_j)/r:
+    grad_i u = u'(r) rhat,      lap_i u = u''(r) + 2 u'(r)/r.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class JastrowParams(NamedTuple):
+    b_ee: jnp.ndarray   # () Padé denominator, e-e
+    b_en: jnp.ndarray   # () Padé denominator, e-n
+    a_en: jnp.ndarray   # () e-n strength
+
+
+def default_params() -> JastrowParams:
+    return JastrowParams(b_ee=jnp.float32(1.0), b_en=jnp.float32(1.0),
+                         a_en=jnp.float32(0.5))
+
+
+def _pade(r, a, b):
+    """u, u', u'' for u = a r / (1 + b r)."""
+    d = 1.0 + b * r
+    u = a * r / d
+    up = a / (d * d)
+    upp = -2.0 * a * b / (d * d * d)
+    return u, up, upp
+
+
+class JastrowState(NamedTuple):
+    value: jnp.ndarray     # () J(R)
+    grad: jnp.ndarray      # (n_elec, 3)
+    lap: jnp.ndarray       # (n_elec,) per-electron laplacian of J
+
+
+def jastrow_state(params: JastrowParams, r_elec: jnp.ndarray,
+                  coords: jnp.ndarray, charges: jnp.ndarray,
+                  n_up: int) -> JastrowState:
+    """r_elec: (n_e, 3); coords: (n_at, 3); charges: (n_at,)."""
+    n_e = r_elec.shape[0]
+    eye = jnp.eye(n_e, dtype=bool)
+
+    # ---- electron-electron ----
+    diff = r_elec[:, None, :] - r_elec[None, :, :]          # (i, j, 3)
+    r2 = jnp.sum(diff * diff, axis=-1)
+    r = jnp.sqrt(jnp.where(eye, 1.0, r2))                   # guard diagonal
+    spin_up = jnp.arange(n_e) < n_up
+    parallel = spin_up[:, None] == spin_up[None, :]
+    a_ee = jnp.where(parallel, 0.25, 0.5).astype(r.dtype)   # cusp conditions
+    u, up, upp = _pade(r, a_ee, params.b_ee)
+    mask = (~eye).astype(r.dtype)
+    val_ee = 0.5 * jnp.sum(u * mask)
+    rhat = diff / r[..., None]
+    grad_ee = jnp.sum((up * mask)[..., None] * rhat, axis=1)
+    lap_ee = jnp.sum((upp + 2.0 * up / r) * mask, axis=1)
+
+    # ---- electron-nucleus ----
+    diff_n = r_elec[:, None, :] - coords[None, :, :]        # (i, a, 3)
+    rn = jnp.sqrt(jnp.sum(diff_n * diff_n, axis=-1) + 1e-20)
+    a_en = -charges[None, :] * params.a_en
+    un, unp, unpp = _pade(rn, a_en, params.b_en)
+    val_en = jnp.sum(un)
+    rhat_n = diff_n / rn[..., None]
+    grad_en = jnp.sum(unp[..., None] * rhat_n, axis=1)
+    lap_en = jnp.sum(unpp + 2.0 * unp / rn, axis=1)
+
+    return JastrowState(value=val_ee + val_en,
+                        grad=grad_ee + grad_en,
+                        lap=lap_ee + lap_en)
+
+
+def jastrow_value(params: JastrowParams, r_elec, coords, charges, n_up):
+    """Value-only path (for autodiff oracles and MC ratios)."""
+    return jastrow_state(params, r_elec, coords, charges, n_up).value

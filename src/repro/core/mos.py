@@ -1,0 +1,60 @@
+"""MO matrix products C_i = A @ B_i, i=1..5 (paper §III — the hot spot).
+
+Three implementations, all returning ``C: (n_orb, n_elec, 5)``:
+
+* ``mo_products_dense``  — the O(N^3) oracle: one dense matmul against the
+  stacked B.  This is also the best XLA path when B is not sparse.
+* ``mo_products_sparse`` — the paper's algorithm, vectorized: per-electron
+  gather of the active columns of A (A stays DENSE — the paper's key choice)
+  against the packed B rows.  O(n_orb * n_elec * K) with K ~ const in N.
+* ``kernels.sparse_mo.ops.sparse_mo_products`` — the Pallas TPU kernel with
+  (8·k,128) tile blocking; bit-compared against these in tests.
+
+The five products share one A-gather (the paper's fused unroll-and-jam:
+amortize loads of A across the 5 right-hand sides).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mo_products_dense(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """A: (n_orb, n_ao), B: (n_ao, n_e, 5) -> C: (n_orb, n_e, 5)."""
+    n_ao, n_e, five = B.shape
+    C = A @ B.reshape(n_ao, n_e * five)
+    return C.reshape(A.shape[0], n_e, five)
+
+
+def mo_products_sparse(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
+                       chunk: int = 64) -> jnp.ndarray:
+    """Sparse product from packed B.
+
+    Args:
+      A:   (n_orb, n_ao) dense MO coefficients (constant during the run).
+      Bp:  (n_e, K, 5) packed active-AO values (zero padded).
+      idx: (n_e, K) active AO indices (padding -> 0; Bp is 0 there).
+      chunk: electron-block size bounding the gathered-A working set
+        (the paper's cache blocking over electrons).
+
+    Returns C: (n_orb, n_e, 5).
+    """
+    n_e = Bp.shape[0]
+    pad = (-n_e) % chunk
+    Bp_ = jnp.pad(Bp, ((0, pad), (0, 0), (0, 0)))
+    idx_ = jnp.pad(idx, ((0, pad), (0, 0)))
+    nb = Bp_.shape[0] // chunk
+
+    def body(carry, eb):
+        bp, ix = eb                            # (chunk,K,5), (chunk,K)
+        Ag = A[:, ix]                          # (n_orb, chunk, K)
+        c = jnp.einsum('oek,ekf->oef', Ag, bp,
+                       preferred_element_type=jnp.float32)
+        return carry, c
+
+    _, Cs = jax.lax.scan(
+        body, 0.,
+        (Bp_.reshape(nb, chunk, *Bp.shape[1:]),
+         idx_.reshape(nb, chunk, idx.shape[1])))
+    C = jnp.moveaxis(Cs, 0, 1).reshape(A.shape[0], nb * chunk, 5)
+    return C[:, :n_e]

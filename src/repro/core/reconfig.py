@@ -1,0 +1,42 @@
+"""Constant-population stochastic reconfiguration (paper §II.B, ref. [17]).
+
+Replaces DMC branching: at every step the M walkers are redrawn from the
+current population with probabilities p_k = w_k / sum(w), keeping M constant
+(no load imbalance, no inter-core walker exchange).  The finite-population
+bias is removed by carrying the *global weight* (product of population-mean
+weights) into the averages.
+
+``reconfigure`` uses systematic (low-variance comb) resampling, which
+preserves E[copies_k] = M p_k exactly — property-tested in
+tests/test_reconfig.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reconfigure(key: jax.Array, weights: jnp.ndarray) -> jnp.ndarray:
+    """Return indices (M,) of the walkers surviving reconfiguration.
+
+    Systematic resampling: one uniform u, comb at spacing 1/M over the
+    cumulative weight distribution.
+    """
+    m = weights.shape[0]
+    p = weights / jnp.sum(weights)
+    cum = jnp.cumsum(p)
+    u = jax.random.uniform(key, ())
+    comb = (u + jnp.arange(m, dtype=cum.dtype)) / m
+    idx = jnp.searchsorted(cum, comb)
+    return jnp.clip(idx, 0, m - 1).astype(jnp.int32)
+
+
+def global_weight_update(log_w_hist: jnp.ndarray, mean_w: jnp.ndarray):
+    """Shift the trailing window of log population weights, append new one.
+
+    log_w_hist: (P,) log of past population-mean weights (most recent last).
+    The product over the window is the estimator weight Pi_t (ref. [17]).
+    """
+    log_w_hist = jnp.roll(log_w_hist, -1)
+    log_w_hist = log_w_hist.at[-1].set(jnp.log(mean_w))
+    return log_w_hist, jnp.exp(jnp.sum(log_w_hist))

@@ -1,0 +1,77 @@
+"""Slater-determinant part: inverse, log|det|, drift and Laplacian ratios.
+
+Given the MO product tensor ``C: (n_orb_tot, n_elec, 5)`` (values + 3 grads +
+laplacian, from ``mos.py``) with the first ``n_up`` rows/electrons forming the
+spin-up block and the rest spin-down (eq. 11), computes per-electron
+
+    grad_i log Det   (eq. 14)   and   (lap_i Det)/Det   (eq. 15)
+
+via the inverse Slater matrix (paper: O(N^3) inversion, DP; here f32 + one
+Newton–Schulz refinement step — see DESIGN.md §3 on the fp64->fp32 move).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlaterState(NamedTuple):
+    sign: jnp.ndarray      # () product of both spin signs
+    logdet: jnp.ndarray    # () sum of log|det| over spins
+    grad: jnp.ndarray      # (n_elec, 3) per-electron grad log Det
+    lap_ratio: jnp.ndarray  # (n_elec,) per-electron (lap Det)/Det
+
+
+def refine_inverse(D: jnp.ndarray, X: jnp.ndarray, steps: int = 1):
+    """Newton–Schulz: X <- X (2I - D X); quadratic convergence."""
+    eye2 = 2.0 * jnp.eye(D.shape[-1], dtype=D.dtype)
+    for _ in range(steps):
+        X = X @ (eye2 - D @ X)
+    return X
+
+
+def _spin_block(C_blk: jnp.ndarray, ns_steps: int):
+    """C_blk: (n, n, 5) one-spin block (orbital, electron, component)."""
+    D = C_blk[..., 0]                                    # (orb, elec)
+    sign, logdet = jnp.linalg.slogdet(D)
+    M = jnp.linalg.inv(D)                                # (elec, orb)
+    if ns_steps:
+        M = refine_inverse(D, M, ns_steps)
+    grad = jnp.einsum('iej,ei->ej', C_blk[..., 1:4], M)  # (elec, 3)
+    lap = jnp.einsum('ie,ei->e', C_blk[..., 4], M)       # (elec,)
+    return sign, logdet, grad, lap, M
+
+
+def slater_state(C: jnp.ndarray, n_up: int, ns_steps: int = 1) -> SlaterState:
+    """Assemble both spin determinants. C: (n_orb_tot, n_elec, 5)."""
+    n_elec = C.shape[1]
+    n_dn = n_elec - n_up
+    su, lu, gu, qu, _ = _spin_block(C[:n_up, :n_up, :], ns_steps)
+    if n_dn > 0:
+        sd, ld, gd, qd, _ = _spin_block(C[n_up:, n_up:, :], ns_steps)
+    else:
+        sd = jnp.ones_like(su); ld = jnp.zeros_like(lu)
+        gd = jnp.zeros((0, 3), C.dtype); qd = jnp.zeros((0,), C.dtype)
+    return SlaterState(
+        sign=su * sd,
+        logdet=lu + ld,
+        grad=jnp.concatenate([gu, gd], axis=0),
+        lap_ratio=jnp.concatenate([qu, qd], axis=0),
+    )
+
+
+def det_ratio_one_electron(Minv: jnp.ndarray, phi_new: jnp.ndarray, j: int):
+    """Sherman–Morrison determinant ratio for moving electron j.
+
+    Minv: (elec, orb) inverse Slater; phi_new: (orb,) new MO values at r_j'.
+    Returns (ratio, updated Minv).  Beyond-paper fast path for
+    single-electron moves (the paper recomputes; we keep both).
+    """
+    ratio = Minv[j] @ phi_new
+    u = Minv @ phi_new                       # (elec,)
+    row = Minv[j] / ratio                    # (orb,)
+    Minv_new = Minv - jnp.outer(u, row)
+    Minv_new = Minv_new.at[j].set(row)
+    return ratio, Minv_new

@@ -1,0 +1,128 @@
+"""Tricubic MO-interpolation baseline (the paper's Einspline comparison).
+
+Most QMC codes pre-tabulate each molecular orbital on a regular 3-D grid and
+interpolate value/gradient/Laplacian per electron (paper §IV.B.4, Table III).
+The paper argues *against* this: memory grows as n_orb * nx*ny*nz while the
+direct computation needs only the (A, basis) pair; and the interpolation is
+memory-latency bound (gather-heavy) while recomputation is FLOP bound.
+
+On TPU the trade-off is even more lopsided (gathers are hostile to the MXU),
+which `benchmarks/table3.py` quantifies.  This implementation exists to make
+that comparison concrete:
+
+* `build_mo_grid`   — tabulate MOs (and nothing else) on a uniform grid.
+* `interp_mo_block` — tricubic (Catmull–Rom) interpolation of C1..C5 per
+  electron, matching the layout of `mos.mo_products_*`.
+
+Catmull–Rom reproduces cubics without a spline-coefficient solve; Einspline's
+uniform B-splines have the same stencil width, FLOP count, and memory-traffic
+pattern, so the perf comparison is faithful even though boundary behaviour
+differs slightly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aos, mos
+from .basis import BasisSet
+
+
+class MOGrid(NamedTuple):
+    values: jnp.ndarray     # (n_orb, nx, ny, nz) f32 — tabulated MO values
+    origin: jnp.ndarray     # (3,)
+    inv_h: jnp.ndarray      # (3,) 1/spacing
+
+    @property
+    def memory_bytes(self) -> int:
+        return self.values.size * self.values.dtype.itemsize
+
+
+def build_mo_grid(basis: BasisSet, coords: jnp.ndarray, mo: jnp.ndarray,
+                  shape: tuple[int, int, int], margin: float = 6.0,
+                  chunk: int = 256) -> MOGrid:
+    """Tabulate phi_i on a uniform grid covering the molecule + margin."""
+    lo = jnp.min(coords, axis=0) - margin
+    hi = jnp.max(coords, axis=0) + margin
+    axes = [jnp.linspace(lo[d], hi[d], shape[d]) for d in range(3)]
+    X, Y, Z = jnp.meshgrid(*axes, indexing='ij')
+    pts = jnp.stack([X.ravel(), Y.ravel(), Z.ravel()], axis=-1)  # (G, 3)
+
+    n_orb = mo.shape[0]
+    out = []
+    for start in range(0, pts.shape[0], chunk):
+        p = pts[start:start + chunk]
+        B, _ = aos.eval_ao_block(basis, coords, p)      # (n_ao, g, 5)
+        C = mos.mo_products_dense(mo, B)[..., 0]        # (n_orb, g)
+        out.append(C)
+    vals = jnp.concatenate(out, axis=1).reshape((n_orb,) + tuple(shape))
+    h = (hi - lo) / (jnp.asarray(shape, lo.dtype) - 1.0)
+    return MOGrid(values=vals, origin=lo, inv_h=1.0 / h)
+
+
+def _cr_weights(t: jnp.ndarray):
+    """Catmull–Rom basis at fractional offset t for a [-1,0,1,2] stencil.
+
+    Returns (w, dw, d2w) each of shape t.shape + (4,); derivatives are in
+    *stencil units* (caller multiplies by inv_h powers).
+    """
+    t2 = t * t
+    t3 = t2 * t
+    w = jnp.stack([
+        -0.5 * t3 + t2 - 0.5 * t,
+        1.5 * t3 - 2.5 * t2 + 1.0,
+        -1.5 * t3 + 2.0 * t2 + 0.5 * t,
+        0.5 * t3 - 0.5 * t2,
+    ], axis=-1)
+    dw = jnp.stack([
+        -1.5 * t2 + 2.0 * t - 0.5,
+        4.5 * t2 - 5.0 * t,
+        -4.5 * t2 + 4.0 * t + 0.5,
+        1.5 * t2 - t,
+    ], axis=-1)
+    d2w = jnp.stack([
+        -3.0 * t + 2.0,
+        9.0 * t - 5.0,
+        -9.0 * t + 4.0,
+        3.0 * t - 1.0,
+    ], axis=-1)
+    return w, dw, d2w
+
+
+def interp_mo_block(grid: MOGrid, r_elec: jnp.ndarray) -> jnp.ndarray:
+    """Tricubic interpolation of C: (n_orb, n_e, 5) at electron positions.
+
+    The 4x4x4 stencil gather per electron is the memory-latency hot spot the
+    paper identifies; all orbitals share one stencil (Einspline's "multiple
+    uniform splines" layout: orbital axis contiguous)."""
+    u = (r_elec - grid.origin[None, :]) * grid.inv_h[None, :]   # grid coords
+    nx, ny, nz = grid.values.shape[1:]
+    dims = jnp.asarray([nx, ny, nz], u.dtype)
+    base = jnp.clip(jnp.floor(u), 1.0, dims - 3.0)
+    t = u - base                                                # (n_e, 3)
+    i0 = base.astype(jnp.int32) - 1                             # stencil start
+
+    w, dw, d2w = _cr_weights(t)                                 # (n_e, 3, 4)
+    ih = grid.inv_h
+
+    def one_electron(i0_e, w_e, dw_e, d2w_e):
+        block = jax.lax.dynamic_slice(
+            grid.values, (0, i0_e[0], i0_e[1], i0_e[2]),
+            (grid.values.shape[0], 4, 4, 4))                    # (orb,4,4,4)
+
+        def contract(wx, wy, wz):
+            return jnp.einsum('oxyz,x,y,z->o', block, wx, wy, wz)
+
+        val = contract(w_e[0], w_e[1], w_e[2])
+        gx = contract(dw_e[0], w_e[1], w_e[2]) * ih[0]
+        gy = contract(w_e[0], dw_e[1], w_e[2]) * ih[1]
+        gz = contract(w_e[0], w_e[1], dw_e[2]) * ih[2]
+        lap = (contract(d2w_e[0], w_e[1], w_e[2]) * ih[0] ** 2
+               + contract(w_e[0], d2w_e[1], w_e[2]) * ih[1] ** 2
+               + contract(w_e[0], w_e[1], d2w_e[2]) * ih[2] ** 2)
+        return jnp.stack([val, gx, gy, gz, lap], axis=-1)       # (orb, 5)
+
+    C = jax.vmap(one_electron)(i0, w, dw, d2w)                  # (n_e, orb, 5)
+    return jnp.transpose(C, (1, 0, 2))                          # (orb, n_e, 5)

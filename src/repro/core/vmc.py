@@ -1,0 +1,107 @@
+"""Variational Monte Carlo: all-electron drift-diffusion Metropolis sampling.
+
+One block = ``steps`` Monte Carlo generations over a local walker population
+(paper §V: a block is the unit of work whose average is an i.i.d. Gaussian
+sample; blocks are droppable/truncatable without bias).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .wavefunction import WavefunctionConfig, WavefunctionParams, psi_state
+
+
+class WalkerEnsemble(NamedTuple):
+    r: jnp.ndarray          # (W, n_e, 3)
+    log_psi: jnp.ndarray    # (W,)
+    sign: jnp.ndarray       # (W,)
+    drift: jnp.ndarray      # (W, n_e, 3)
+    e_loc: jnp.ndarray      # (W,)
+
+
+class BlockStats(NamedTuple):
+    """Means over a block; combined by the runtime via weighted averaging."""
+    e_mean: jnp.ndarray
+    e2_mean: jnp.ndarray
+    weight: jnp.ndarray       # total statistical weight (walker-steps)
+    accept: jnp.ndarray       # acceptance fraction
+    ao_fill: jnp.ndarray      # mean active-AO count per electron (sparsity)
+    e_kin: jnp.ndarray
+    e_pot: jnp.ndarray
+
+
+def _evaluate(cfg, params, r):
+    st = jax.vmap(partial(psi_state, cfg, params))(r)
+    return WalkerEnsemble(r=r, log_psi=st.log_psi, sign=st.sign,
+                          drift=st.drift, e_loc=st.e_loc), st
+
+
+def init_walkers(cfg: WavefunctionConfig, params: WavefunctionParams,
+                 key: jax.Array, n_walkers: int,
+                 spread: float = 1.5) -> WalkerEnsemble:
+    """Electrons scattered around (charge-weighted) random nuclei."""
+    n_e = cfg.n_elec
+    ka, kb = jax.random.split(key)
+    n_at = params.coords.shape[0]
+    probs = params.charges / jnp.sum(params.charges)
+    at = jax.random.choice(ka, n_at, (n_walkers, n_e), p=probs)
+    centers = params.coords[at]
+    r = centers + spread * jax.random.normal(kb, (n_walkers, n_e, 3),
+                                             dtype=params.coords.dtype)
+    ens, _ = _evaluate(cfg, params, r)
+    return ens
+
+
+def _log_green(r_to, r_from, drift_from, tau):
+    """log G(r_to <- r_from) for the drift-diffusion proposal."""
+    d = r_to - r_from - tau * drift_from
+    return -jnp.sum(d * d, axis=(-1, -2)) / (2.0 * tau)
+
+
+def vmc_step(cfg, params, ens: WalkerEnsemble, key, tau):
+    kp, ka = jax.random.split(key)
+    eta = jax.random.normal(kp, ens.r.shape, dtype=ens.r.dtype)
+    r_new = ens.r + tau * ens.drift + jnp.sqrt(tau) * eta
+    new, _ = _evaluate(cfg, params, r_new)
+    log_ratio = (2.0 * (new.log_psi - ens.log_psi)
+                 + _log_green(ens.r, r_new, new.drift, tau)
+                 - _log_green(r_new, ens.r, ens.drift, tau))
+    accept = jnp.log(jax.random.uniform(ka, log_ratio.shape)) < log_ratio
+    pick = lambda a, b: jnp.where(
+        accept.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+    merged = WalkerEnsemble(*(pick(a, b) for a, b in zip(new, ens)))
+    return merged, accept
+
+
+def vmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
+              ens: WalkerEnsemble, key: jax.Array, steps: int,
+              tau: float):
+    """Run one VMC block; returns (ensemble, BlockStats). jit-able."""
+
+    def body(carry, k):
+        e, = carry
+        e2, acc = vmc_step(cfg, params, e, k, tau)
+        out = (e2.e_loc, acc.astype(jnp.float32))
+        return (e2,), out
+
+    keys = jax.random.split(key, steps)
+    (ens_out,), (e_hist, acc_hist) = jax.lax.scan(body, (ens,), keys)
+    # sparsity stats from the final configuration (cheap, representative)
+    _, st = _evaluate(cfg, params, ens_out.r)
+    w = jnp.float32(e_hist.size)
+    stats = BlockStats(
+        e_mean=jnp.mean(e_hist), e2_mean=jnp.mean(e_hist ** 2), weight=w,
+        accept=jnp.mean(acc_hist),
+        ao_fill=jnp.mean(st.ao_count.astype(jnp.float32)),
+        e_kin=jnp.mean(st.e_kin), e_pot=jnp.mean(st.e_pot))
+    return ens_out, stats
+
+
+def make_vmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
+    """jit'd block runner with static config."""
+    fn = partial(vmc_block, cfg)
+    return jax.jit(lambda params, ens, key: fn(params, ens, key, steps, tau))

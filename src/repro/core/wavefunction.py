@@ -1,0 +1,158 @@
+"""Trial wavefunction Psi_T = e^J * Det_up * Det_dn: assembly + local energy.
+
+The computational pipeline per walker (paper §II.C / §III):
+
+    AOs B1..B5  ->  (sparsify)  ->  C_i = A B_i  ->  Slater inverse  ->
+    drift (eq. 14), laplacian (eq. 15)  ->  E_L = -1/2 lap Psi/Psi + V
+
+``method`` selects the product implementation: 'dense' (O(N^3) oracle),
+'sparse' (paper's algorithm, gather form), 'kernel' (Pallas tile-sparse).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aos, mos, slater
+from .basis import BasisSet
+from .hamiltonian import potential_energy
+from .jastrow import JastrowParams, jastrow_state, jastrow_value
+
+
+@dataclasses.dataclass(frozen=True)
+class WavefunctionConfig:
+    """Static (trace-time) configuration."""
+
+    basis: BasisSet
+    n_up: int
+    n_dn: int
+    k_max: int = 0                 # padded active-AO count; 0 -> n_ao (dense)
+    shared_orbitals: bool = True   # closed-shell: one MO block for both spins
+    method: str = 'sparse'         # 'dense' | 'sparse' | 'kernel'
+    ns_steps: int = 1              # Newton–Schulz refinement of the inverse
+    kernel_tiles: tuple = (8, 8, 8)  # (tile_o, tile_k, tile_e); 128s on TPU
+
+    @property
+    def n_elec(self) -> int:
+        return self.n_up + self.n_dn
+
+
+class WavefunctionParams(NamedTuple):
+    """Dynamic parameters (constant during a run — the paper's 'A' etc.)."""
+
+    coords: jnp.ndarray     # (n_at, 3)
+    charges: jnp.ndarray    # (n_at,)
+    mo: jnp.ndarray         # (n_rows, n_ao) MO coefficients ('A' matrix)
+    jastrow: JastrowParams
+
+
+class PsiState(NamedTuple):
+    sign: jnp.ndarray        # ()
+    log_psi: jnp.ndarray     # () log|Psi_T|
+    drift: jnp.ndarray       # (n_e, 3) grad log Psi_T
+    e_loc: jnp.ndarray       # () local energy
+    e_kin: jnp.ndarray       # ()
+    e_pot: jnp.ndarray       # ()
+    ao_count: jnp.ndarray    # (n_e,) active AOs per electron (sparsity stats)
+
+
+def _mo_tensor(cfg: WavefunctionConfig, params: WavefunctionParams,
+               r_elec: jnp.ndarray):
+    """Compute C: (n_rows, n_e, 5) by the selected method + sparsity stats."""
+    B, atom_active = aos.eval_ao_block(cfg.basis, params.coords, r_elec)
+    ao_mask = atom_active[:, jnp.asarray(cfg.basis.ao_atom)]
+    count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)
+    if cfg.method == 'kernel':
+        from repro.kernels.sparse_mo.ops import sparse_mo_products
+        to, tk, te = cfg.kernel_tiles
+        return sparse_mo_products(params.mo, B, ao_mask, tile_o=to,
+                                  tile_k=tk, tile_e=te), count
+    if cfg.method == 'dense' or cfg.k_max <= 0:
+        return mos.mo_products_dense(params.mo, B), count
+    idx, valid, _ = aos.active_ao_indices(cfg.basis, atom_active, cfg.k_max)
+    Bp = aos.pack_b(B, idx, valid)
+    return mos.mo_products_sparse(params.mo, Bp, idx), count
+
+
+def _slater_blocks(cfg: WavefunctionConfig, C: jnp.ndarray):
+    """Rearrange C rows into the stacked (orb, elec, 5) det layout."""
+    if cfg.shared_orbitals:
+        up = C[:cfg.n_up, :cfg.n_up, :]
+        dn = C[:cfg.n_dn, cfg.n_up:, :]
+    else:
+        up = C[:cfg.n_up, :cfg.n_up, :]
+        dn = C[cfg.n_up:, cfg.n_up:, :]
+    return up, dn
+
+
+def psi_state(cfg: WavefunctionConfig, params: WavefunctionParams,
+              r_elec: jnp.ndarray) -> PsiState:
+    """Full per-walker evaluation: value, drift, local energy."""
+    C, count = _mo_tensor(cfg, params, r_elec)
+    up, dn = _slater_blocks(cfg, C)
+    su, lu, gu, qu, _ = slater._spin_block(up, cfg.ns_steps)
+    if cfg.n_dn > 0:
+        sd, ld, gd, qd, _ = slater._spin_block(dn, cfg.ns_steps)
+        sign = su * sd
+        logdet = lu + ld
+        sgrad = jnp.concatenate([gu, gd], axis=0)
+        slap = jnp.concatenate([qu, qd], axis=0)
+    else:
+        sign, logdet, sgrad, slap = su, lu, gu, qu
+
+    jas = jastrow_state(params.jastrow, r_elec, params.coords,
+                        params.charges, cfg.n_up)
+    drift = sgrad + jas.grad
+    # lap Psi / Psi = lapD/D + lapJ + |gradJ|^2 + 2 gradJ . gradD/D, per elec
+    lap_psi_ratio = (slap + jas.lap
+                     + jnp.sum(jas.grad * jas.grad, axis=-1)
+                     + 2.0 * jnp.sum(jas.grad * sgrad, axis=-1))
+    e_kin = -0.5 * jnp.sum(lap_psi_ratio)
+    e_pot = potential_energy(r_elec, params.coords, params.charges)
+    return PsiState(sign=sign, log_psi=logdet + jas.value, drift=drift,
+                    e_loc=e_kin + e_pot, e_kin=e_kin, e_pot=e_pot,
+                    ao_count=count)
+
+
+def log_psi(cfg: WavefunctionConfig, params: WavefunctionParams,
+            r_elec: jnp.ndarray):
+    """(sign, log|Psi|) only — Metropolis ratios and autodiff oracles."""
+    C, _ = _mo_tensor(cfg, params, r_elec)
+    up, dn = _slater_blocks(cfg, C)
+    su, lu = jnp.linalg.slogdet(up[..., 0])
+    if cfg.n_dn > 0:
+        sd, ld = jnp.linalg.slogdet(dn[..., 0])
+    else:
+        sd, ld = jnp.ones_like(su), jnp.zeros_like(lu)
+    jv = jastrow_value(params.jastrow, r_elec, params.coords,
+                       params.charges, cfg.n_up)
+    return su * sd, lu + ld + jv
+
+
+def local_energy_autodiff(cfg: WavefunctionConfig,
+                          params: WavefunctionParams,
+                          r_elec: jnp.ndarray):
+    """Autodiff oracle: E_L from grad/laplacian of log|Psi| (tests only)."""
+    flat = r_elec.reshape(-1)
+
+    def f(x):
+        return log_psi(cfg, params, x.reshape(r_elec.shape))[1]
+
+    grad = jax.grad(f)(flat)
+    n = flat.shape[0]
+    eye = jnp.eye(n, dtype=flat.dtype)
+    hdiag = jax.vmap(
+        lambda v: jax.jvp(jax.grad(f), (flat,), (v,))[1] @ v)(eye)
+    lap_log = jnp.sum(hdiag)
+    e_kin = -0.5 * (lap_log + jnp.sum(grad * grad))
+    return e_kin + potential_energy(r_elec, params.coords, params.charges)
+
+
+def make_batched(cfg: WavefunctionConfig):
+    """vmap'd psi_state over a walker batch R: (W, n_e, 3)."""
+    fn = partial(psi_state, cfg)
+    return jax.vmap(fn, in_axes=(None, 0))

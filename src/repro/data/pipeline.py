@@ -1,0 +1,79 @@
+"""Data pipeline: deterministic synthetic token streams + sharded feeding.
+
+No tokenized corpora ship offline, so training examples draw from a
+deterministic synthetic language (a seeded Markov-ish stream with local
+structure, so the CE loss actually *decreases* during smoke training —
+pure-uniform tokens would pin the loss at log V).
+
+`shard_batch` builds a global jax.Array from per-host numpy via
+``jax.make_array_from_process_local_data`` — on a real multi-host fleet
+each host feeds only its addressable shard; in this single-process harness
+it degenerates to device_put with the same sharding.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+class SyntheticTokens:
+    """Deterministic structured token stream.
+
+    Each sequence interleaves a handful of 'motifs' (fixed n-grams) with
+    noise tokens — enough structure for loss curves to move, cheap enough
+    to generate at fleet scale (the generator is the dataset; no I/O).
+    """
+
+    def __init__(self, vocab: int, batch: int, seq_len: int, seed: int = 0,
+                 n_codebooks: int = 0, n_motifs: int = 32,
+                 motif_len: int = 8):
+        self.vocab, self.batch, self.seq = vocab, batch, seq_len
+        self.ncb = n_codebooks
+        rng = np.random.default_rng(seed)
+        self.motifs = rng.integers(0, vocab,
+                                   (n_motifs, motif_len)).astype(np.int32)
+        self._seed = seed
+        self._step = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng((self._seed, self._step))
+        self._step += 1
+        shape = ((self.batch, self.seq, self.ncb) if self.ncb
+                 else (self.batch, self.seq))
+        toks = rng.integers(0, self.vocab, shape).astype(np.int32)
+        flat = toks.reshape(self.batch, -1)
+        L = self.motifs.shape[1]
+        for b in range(self.batch):
+            n_ins = flat.shape[1] // (2 * L)
+            starts = rng.integers(0, flat.shape[1] - L, n_ins)
+            which = rng.integers(0, self.motifs.shape[0], n_ins)
+            for s, w in zip(starts, which):
+                flat[b, s:s + L] = self.motifs[w]
+        return {'tokens': flat.reshape(shape)}
+
+
+def shard_batch(batch: dict, shardings: dict) -> dict:
+    """Host numpy -> global sharded jax.Arrays."""
+    out = {}
+    for k, v in batch.items():
+        sh = shardings[k]
+        try:
+            out[k] = jax.make_array_from_process_local_data(sh, v)
+        except Exception:               # single-process fallback
+            out[k] = jax.device_put(v, sh)
+    return out
+
+
+def synthetic_prefix_embeds(cfg: ModelConfig, batch: int,
+                            seed: int = 0) -> np.ndarray:
+    """Stub modality frontend (vlm): precomputed patch embeddings."""
+    rng = np.random.default_rng(seed)
+    return rng.normal(scale=0.02, size=(
+        batch, cfg.n_prefix_tokens, cfg.d_model)).astype(np.float32)

@@ -1,0 +1,46 @@
+"""jit'd wrapper: (B, S, H, hd) layout handling, padding, GQA head map."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=('window', 'block_q', 'block_k',
+                                             'interpret'))
+def mha_flash(q, k, v, *, window: int = 0, block_q: int = 128,
+              block_k: int = 128, interpret: bool = True):
+    """q: (B, S, H, hd); k/v: (B, S, H, hd) (kv already head-expanded).
+
+    Returns (B, S, H, hd).  Pads S to block multiples and hd to 128.
+    """
+    B, S, H, hd = q.shape
+    bq = min(block_q, max(8, S))
+    bk = min(block_k, max(8, S))
+
+    def flat(x):
+        x = jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, S, hd)
+        x = _pad_axis(x, 1, max(bq, bk))
+        return _pad_axis(x, 2, 128 if not interpret else 8)
+
+    qf, kf, vf = flat(q), flat(k), flat(v)
+    o = flash_attention(qf, kf, vf, window=window, block_q=bq, block_k=bk,
+                        interpret=interpret)
+    o = o[:, :S, :hd].reshape(B, H, S, hd)
+    return jnp.transpose(o, (0, 2, 1, 3))
+
+
+__all__ = ['mha_flash', 'attention_ref', 'flash_attention']

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  window: int = 0) -> jnp.ndarray:
+    """q, k, v: (BH, S, hd).  Causal softmax attention, optional window."""
+    S = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum('bqd,bkd->bqk', q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = qp >= kp
+    if window:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum('bqk,bkd->bqd', p,
+                      v.astype(jnp.float32)).astype(q.dtype)

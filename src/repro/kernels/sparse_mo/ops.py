@@ -1,0 +1,76 @@
+"""jit'd wrapper: padding, tile-activity extraction, kernel dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sparse_mo_matmul
+from .ref import mo_products_ref
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def tile_block_ids(ao_active: jnp.ndarray, *, tile_e: int, tile_k: int,
+                   max_kb: int):
+    """Active k-tile lists per electron tile.
+
+    ao_active: (n_e, n_ao) bool (exact-zero structure of B).
+    Returns (block_ids (e_tiles, max_kb) int32, num_active (e_tiles,) int32).
+    Overflow beyond max_kb is truncated — callers choose max_kb >= worst case
+    (n_kb tiles) for exactness; see ``sparse_mo_products``.
+    """
+    ao_active = _pad_to(ao_active, 0, tile_e)
+    ao_active = _pad_to(ao_active, 1, tile_k)
+    n_e, n_ao = ao_active.shape
+    e_tiles, n_kb = n_e // tile_e, n_ao // tile_k
+    act = ao_active.reshape(e_tiles, tile_e, n_kb, tile_k)
+    tile_act = jnp.any(act, axis=(1, 3))                     # (e_tiles, n_kb)
+    order = jnp.argsort(~tile_act, axis=-1, stable=True)     # active first
+    count = jnp.sum(tile_act.astype(jnp.int32), axis=-1)
+    ids = order[:, :max_kb].astype(jnp.int32)
+    ids = jnp.where(jnp.arange(max_kb)[None] < count[:, None], ids, 0)
+    return ids, jnp.minimum(count, max_kb)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    'tile_o', 'tile_k', 'tile_e', 'max_kb', 'interpret'))
+def sparse_mo_products(A: jnp.ndarray, B: jnp.ndarray,
+                       ao_active: jnp.ndarray, *,
+                       tile_o: int = 128, tile_k: int = 128,
+                       tile_e: int = 128, max_kb: int = 0,
+                       interpret: bool = True) -> jnp.ndarray:
+    # tile_e default 128 (640 lanes = 5x128): measured optimum on the 1AMB
+    # benchmark — smaller tiles skip more but waste MXU lanes
+    # (EXPERIMENTS.md §Perf-QMC iteration 3).
+    """Tile-sparse C_i = A @ B_i for i=1..5.
+
+    A: (n_orb, n_ao); B: (n_ao, n_e, 5); ao_active: (n_e, n_ao) bool.
+    max_kb=0 -> exact (worst-case number of k tiles).
+    Returns C: (n_orb, n_e, 5).
+    """
+    n_orb, n_ao = A.shape
+    n_e = B.shape[1]
+    Ap = _pad_to(_pad_to(A, 0, tile_o), 1, tile_k)
+    # electron-major 2-D layout: 5 contiguous columns per electron
+    B2 = B.reshape(n_ao, n_e * 5)
+    B2 = _pad_to(_pad_to(B2, 0, tile_k), 1, tile_e * 5)
+    n_kb = Ap.shape[1] // tile_k
+    if max_kb <= 0 or max_kb > n_kb:
+        max_kb = n_kb
+    ids, num = tile_block_ids(ao_active, tile_e=tile_e, tile_k=tile_k,
+                              max_kb=max_kb)
+    C2 = sparse_mo_matmul(Ap, B2, ids, num, tile_o=tile_o, tile_k=tile_k,
+                          tile_e5=tile_e * 5, interpret=interpret)
+    return C2[:n_orb, :n_e * 5].reshape(n_orb, n_e, 5)
+
+
+__all__ = ['sparse_mo_products', 'tile_block_ids', 'mo_products_ref']

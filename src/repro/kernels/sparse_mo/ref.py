@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the tile-sparse MO product kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mo_products_ref(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Dense oracle.  A: (n_orb, n_ao); B: (n_ao, n_e, 5) -> (n_orb, n_e, 5).
+
+    B carries exact zeros outside the screened AO set, so the dense product
+    equals the sparse one bit-for-bit up to summation order.
+    """
+    n_ao, n_e, five = B.shape
+    C = jnp.dot(A, B.reshape(n_ao, n_e * five),
+                preferred_element_type=jnp.float32)
+    return C.reshape(A.shape[0], n_e, five)

@@ -1,0 +1,90 @@
+"""WKV6 chunked-recurrence Pallas TPU kernel (RWKV6 time-mix hot spot).
+
+Carries the (d x d) per-head state in VMEM scratch across the sequential
+chunk grid dimension; each chunk evaluates the parallel matrix form of
+models/linear_scan.rwkv6_chunk (all exponents <= 0 — numerically safe).
+
+Grid: (B*H, n_chunks) with chunks 'arbitrary' (sequential).  Block shapes
+(CHUNK, d) with d = 64 (RWKV head size); CHUNK=64 keeps the (C, C, d)
+pairwise tensor at 1 MiB f32 — comfortably inside VMEM next to the state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_ref, *,
+            chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0]                                    # (C, d) f32
+    k = k_ref[0]
+    v = v_ref[0]
+    lw = lw_ref[0]
+    u = u_ref[0]                                    # (1, d)
+
+    Lw = jnp.cumsum(lw, axis=0)                     # (C, d)
+    P = jnp.concatenate([jnp.zeros_like(Lw[:1]), Lw[:-1]], axis=0)
+
+    D3 = P[:, None, :] - Lw[None, :, :]             # (C, C, d) <= 0 for i<t
+    C = chunk
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    tri = (ii < ti)[:, :, None]
+    E = jnp.where(tri, jnp.exp(D3), 0.0)
+    A = jnp.einsum('tc,ic,tic->ti', r, k, E)        # (C, C)
+
+    S0 = s_ref[...]                                 # (d, d)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y += jax.lax.dot_general(r * jnp.exp(P), S0,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y += jnp.sum(r * u * k, axis=-1, keepdims=True) * v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    kd = k * jnp.exp(Lw[-1][None, :] - Lw)          # (C, d)
+    s_ref[...] = (jnp.exp(Lw[-1])[:, None] * S0
+                  + jax.lax.dot_general(kd, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=('chunk', 'interpret'))
+def wkv6_forward(r, k, v, log_w, u, *, chunk: int = 64,
+                 interpret: bool = True):
+    """r/k/v/log_w: (BH, S, d) f32; u: (BH, d).  Returns y: (BH, S, d).
+
+    Zero initial state (prefill); the decode path is a trivial jnp
+    expression (linear_scan.rwkv6_decode) and needs no kernel.
+    """
+    BH, S, d = r.shape
+    assert S % chunk == 0, (S, chunk)
+    n_c = S // chunk
+    kern = functools.partial(_kernel, chunk=chunk)
+    u2 = u[:, None, :]                              # (BH, 1, d)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, n_c),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=('parallel', 'arbitrary')),
+        interpret=interpret,
+    )(r, k, v, log_w, u2)

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the WKV6 kernel: (B, H, S, d) <-> (BH, S, d) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv.kernel import wkv6_forward
+from repro.kernels.wkv.ref import wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=('chunk', 'interpret'))
+def wkv6(r, k, v, log_w, u, *, chunk: int = 64, interpret: bool = True):
+    """r/k/v/log_w: (B, H, S, d); u: (H, d).  Returns y: (B, H, S, d)."""
+    B, H, S, d = r.shape
+    flat = lambda x: x.reshape(B * H, S, d)
+    uf = jnp.tile(u[None], (B, 1, 1)).reshape(B * H, d)
+    y = wkv6_forward(flat(r), flat(k), flat(v), flat(log_w), uf,
+                     chunk=chunk, interpret=interpret)
+    return y.reshape(B, H, S, d)
+
+
+__all__ = ['wkv6', 'wkv6_ref']

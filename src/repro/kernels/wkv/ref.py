@@ -1,0 +1,19 @@
+"""Oracle: token-by-token WKV6 recurrence (zero initial state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.linear_scan import rwkv6_ref
+
+
+def wkv6_ref(r, k, v, log_w, u):
+    """(BH, S, d) inputs; u: (BH, d).  Returns y: (BH, S, d)."""
+    def one(rb, kb, vb, wb, ub):
+        d = rb.shape[-1]
+        y, _ = rwkv6_ref(rb[None, None], kb[None, None], vb[None, None],
+                         wb[None, None], ub[None],
+                         jnp.zeros((1, 1, d, d), jnp.float32))
+        return y[0, 0]
+
+    return jax.vmap(one)(r, k, v, log_w, u)

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE two lines above run before any other import — jax locks the device
+count at first init, and the production meshes need 256/512 placeholder
+host devices.  Never set this flag globally (smoke tests and benches must
+see 1 device).
+
+Per cell this driver:
+  1. builds the production mesh ((16,16) or (2,16,16));
+  2. constructs abstract params/optimizer/cache trees (ShapeDtypeStructs —
+     zero allocation) with mesh-derived shardings;
+  3. ``jax.jit(step, in_shardings=..., out_shardings=...).lower(...)`` and
+     ``.compile()`` — a sharding mismatch, compile-OOM, or unsupported
+     collective here is a bug in the framework;
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the partitioned HLO) to a JSON cell report for
+     §Dry-run / §Roofline of EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / 'experiments' / 'dryrun'
+
+COLLECTIVE_OPS = ('all-reduce', 'all-gather', 'reduce-scatter',
+                  'all-to-all', 'collective-permute')
+
+_DTYPE_BYTES = {'f64': 8, 'f32': 4, 'bf16': 2, 'f16': 2, 's32': 4,
+                'u32': 4, 's8': 1, 'u8': 1, 'pred': 1, 's64': 8, 'u64': 8,
+                's16': 2, 'u16': 2, 'c64': 8, 'c128': 16}
+
+_HLO_RE = re.compile(
+    r'=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+'
+    r'(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)'
+    r'(?:-start)?\(')
+_SHAPE_RE = re.compile(r'(\w+)\[([\d,]*)\]')
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(','):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-buffer bytes of every collective in the partitioned HLO.
+
+    Result size is the per-device payload proxy: an all-gather's result is
+    the gathered buffer (bytes received per device), an all-reduce moves
+    ~2x its buffer in a ring but we report buffer bytes and fold the ring
+    factor into the roofline's link-bandwidth model.
+    """
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for m in _HLO_RE.finditer(hlo_text):
+        tuple_part, dtype, dims, op = m.group(1), m.group(2), m.group(3), \
+            m.group(4)
+        if tuple_part is not None:
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _SHAPE_RE.findall(tuple_part))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        out[op] += nbytes
+        counts[op] += 1
+    return {'bytes': out, 'counts': counts,
+            'total_bytes': int(sum(out.values()))}
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool = False,
+               opt: dict | None = None):
+    """Build + lower + compile one cell. Returns (lowered, compiled, cfg)."""
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import (SHAPES, cell_is_applicable, input_specs)
+    from repro.models.params import abstract_params
+    from repro.models.transformer import decode_step, prefill
+    from repro.sharding.partition import (batch_pspec, cache_pspecs,
+                                          named_sharding_tree)
+    from jax.sharding import NamedSharding
+
+    opt = opt or {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = {'model_axis': mesh.shape['model']}
+    if 'n_layers' in opt:                 # roofline layer calibration
+        overrides['n_layers'] = opt['n_layers']
+    overrides.update(opt.get('cfg', {}))  # §Perf knobs (mha_identity, ...)
+    cfg = get_config(arch, **overrides)
+    if not cell_is_applicable(cfg, shape):
+        return None, None, cfg
+
+    specs = input_specs(cfg, shape)
+    ab_params = abstract_params(cfg)
+    param_sh = named_sharding_tree(cfg, mesh)
+    program = SHAPES[shape].program
+
+    if program == 'train':
+        from repro.train.step import make_train_step
+        from repro.train.optimizer import adamw_abstract
+        step = make_train_step(cfg, mesh,
+                               remat=opt.get('remat', True),
+                               zero1=opt.get('zero1', True),
+                               donate=False)
+        ab_opt = adamw_abstract(ab_params)
+        lowered = step.lower(ab_params, ab_opt, specs)
+    elif program == 'prefill':
+        from repro.serve.engine import make_prefill
+        fn = make_prefill(cfg, mesh, q_chunk=opt.get('q_chunk', 1024))
+        args = (ab_params, specs['tokens'])
+        if cfg.n_prefix_tokens:
+            args = args + (specs['prefix_embeds'],)
+        lowered = fn.lower(*args)
+    else:  # decode
+        cache_sh = jax.tree.map(
+            lambda p: NamedSharding(mesh, p),
+            cache_pspecs(cfg, mesh, specs['cache']))
+        tok_ndim = 3 if cfg.n_codebooks else 2
+        tok_sh = NamedSharding(
+            mesh, batch_pspec(mesh, tok_ndim,
+                              batch_size=specs['tokens'].shape[0]))
+        fn = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c),
+                     in_shardings=(param_sh, tok_sh, cache_sh),
+                     out_shardings=(None, cache_sh))
+        lowered = fn.lower(ab_params, specs['tokens'], specs['cache'])
+
+    compiled = lowered.compile()
+    return lowered, compiled, cfg
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             opt: dict | None = None, tag: str = 'baseline') -> dict:
+    t0 = time.time()
+    mesh_name = 'pod2x16x16' if multi_pod else 'pod16x16'
+    cell = {'arch': arch, 'shape': shape, 'mesh': mesh_name, 'tag': tag,
+            'status': 'ok'}
+    try:
+        lowered, compiled, cfg = lower_cell(arch, shape, multi_pod, opt)
+        if compiled is None:
+            cell['status'] = 'skipped'
+            cell['reason'] = ('long_500k needs sub-quadratic attention; '
+                              f'{arch} is full-attention (DESIGN.md §6)')
+            return cell
+        try:
+            ca = compiled.cost_analysis()
+            cell['cost_analysis'] = {k: float(v) for k, v in ca.items()
+                                     if np.isscalar(v)}
+        except Exception as e:            # backend may not support it
+            cell['cost_analysis'] = {'error': str(e)}
+        try:
+            ma = compiled.memory_analysis()
+            cell['memory_analysis'] = {
+                k: int(getattr(ma, k)) for k in
+                ('argument_size_in_bytes', 'output_size_in_bytes',
+                 'temp_size_in_bytes', 'generated_code_size_in_bytes')
+                if hasattr(ma, k)}
+        except Exception as e:
+            cell['memory_analysis'] = {'error': str(e)}
+        hlo = compiled.as_text()
+        cell['collectives'] = collective_bytes(hlo)
+        cell['hlo_bytes'] = len(hlo)
+        cell['compile_s'] = round(time.time() - t0, 1)
+    except Exception:
+        cell['status'] = 'failed'
+        cell['error'] = traceback.format_exc()[-2000:]
+    return cell
+
+
+def save_cell(cell: dict) -> Path:
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{cell['arch']}_{cell['shape']}_{cell['mesh']}_{cell['tag']}.json"
+    path = REPORT_DIR / name
+    path.write_text(json.dumps(cell, indent=1))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default=None)
+    ap.add_argument('--shape', default=None)
+    ap.add_argument('--multi-pod', action='store_true')
+    ap.add_argument('--all', action='store_true')
+    ap.add_argument('--tag', default='baseline')
+    ap.add_argument('--opt', default='{}', help='JSON opt knobs')
+    args = ap.parse_args()
+    opt = json.loads(args.opt)
+
+    from repro.configs import all_arch_ids
+    from repro.launch.shapes import SHAPES
+
+    cells = []
+    archs = all_arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    for arch in archs:
+        for shape in shapes:
+            print(f'=== {arch} x {shape} '
+                  f'({"2x16x16" if args.multi_pod else "16x16"}) ===',
+                  flush=True)
+            cell = run_cell(arch, shape, args.multi_pod, opt, args.tag)
+            path = save_cell(cell)
+            status = cell['status']
+            extra = ''
+            if status == 'ok':
+                fl = cell['cost_analysis'].get('flops', float('nan'))
+                cb = cell['collectives']['total_bytes']
+                extra = (f" flops={fl:.3g} coll_bytes={cb:.3g}"
+                         f" compile={cell['compile_s']}s")
+            print(f'  -> {status}{extra}  [{path.name}]', flush=True)
+            cells.append(cell)
+    n_ok = sum(c['status'] == 'ok' for c in cells)
+    n_skip = sum(c['status'] == 'skipped' for c in cells)
+    n_fail = sum(c['status'] == 'failed' for c in cells)
+    print(f'\n{n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED')
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())

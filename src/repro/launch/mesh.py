@@ -1,0 +1,41 @@
+"""Production mesh factory.
+
+Kept as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count before first jax use.
+
+Mesh layout (TPU v5e pods):
+  single-pod: (data=16, model=16)        = 256 chips
+  multi-pod:  (pod=2, data=16, model=16) = 512 chips
+'model' maps onto the fastest ICI dimension (tensor-parallel collectives
+are latency-critical); 'pod' crosses the DCN and only ever carries
+data-parallel gradient all-reduces.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(model: int = 2, data: int = 2, pod: int = 0):
+    """Small mesh for CI-scale dry-run tests (device count permitting)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def flat_walker_mesh():
+    """QMC deployment: every device is an independent walker farm — one
+    flat axis, zero collectives inside a block (paper §V)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("walkers",))
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md tables from experiments/{roofline,dryrun} JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--tag baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[3] / 'experiments'
+
+
+def _load(dirname: str, tag: str):
+    cells = []
+    d = ROOT / dirname
+    if not d.exists():
+        return cells
+    for f in sorted(d.glob(f'*_{tag}.json')):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def _fmt_bytes(n):
+    if n is None:
+        return '-'
+    for unit in ('B', 'KiB', 'MiB', 'GiB', 'TiB'):
+        if abs(n) < 1024:
+            return f'{n:.1f}{unit}'
+        n /= 1024
+    return f'{n:.1f}PiB'
+
+
+def roofline_table(tag: str = 'baseline') -> str:
+    cells = _load('roofline', tag)
+    rows = ['| arch | shape | compute s | memory s | collective s | '
+            'dominant | MODEL_FLOPS | useful ratio | note |',
+            '|---|---|---|---|---|---|---|---|---|']
+    for c in cells:
+        if c['status'] == 'skipped':
+            rows.append(f"| {c['arch']} | {c['shape']} | - | - | - | - | - "
+                        f"| - | SKIP: full attention at 500k |")
+            continue
+        if c['status'] != 'ok':
+            rows.append(f"| {c['arch']} | {c['shape']} | - | - | - | - | - "
+                        f"| - | FAILED |")
+            continue
+        t = c['terms_s']
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {t['compute']:.4f} | "
+            f"{t['memory']:.4f} | {t['collective']:.4f} | {c['dominant']} | "
+            f"{c['model_flops']:.3g} | {c['useful_ratio']:.2f} | |")
+    return '\n'.join(rows)
+
+
+def dryrun_table(tag: str = 'baseline') -> str:
+    cells = _load('dryrun', tag)
+    rows = ['| arch | shape | mesh | per-device FLOPs | coll bytes/dev | '
+            'arg bytes/dev | temp bytes/dev | compile s | status |',
+            '|---|---|---|---|---|---|---|---|---|']
+    for c in cells:
+        ma = c.get('memory_analysis', {})
+        ca = c.get('cost_analysis', {})
+        coll = c.get('collectives', {})
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{ca.get('flops', 0):.3g} | "
+            f"{_fmt_bytes(coll.get('total_bytes'))} | "
+            f"{_fmt_bytes(ma.get('argument_size_in_bytes'))} | "
+            f"{_fmt_bytes(ma.get('temp_size_in_bytes'))} | "
+            f"{c.get('compile_s', '-')} | {c['status']} |")
+    return '\n'.join(rows)
+
+
+def collective_mix(tag: str = 'baseline') -> str:
+    cells = [c for c in _load('roofline', tag) if c['status'] == 'ok']
+    rows = ['| arch | shape | all-reduce | all-gather | reduce-scatter | '
+            'all-to-all | permute |', '|---|---|---|---|---|---|---|']
+    for c in cells:
+        b = c['collectives']['bytes']
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | "
+            + ' | '.join(_fmt_bytes(b[k]) for k in
+                         ('all-reduce', 'all-gather', 'reduce-scatter',
+                          'all-to-all', 'collective-permute')) + ' |')
+    return '\n'.join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--tag', default='baseline')
+    ap.add_argument('--section', default='all',
+                    choices=('all', 'roofline', 'dryrun', 'collectives'))
+    args = ap.parse_args()
+    if args.section in ('all', 'roofline'):
+        print('## Roofline (single-pod 16x16 = 256 chips)\n')
+        print(roofline_table(args.tag))
+    if args.section in ('all', 'dryrun'):
+        print('\n## Dry-run cells\n')
+        print(dryrun_table(args.tag))
+    if args.section in ('all', 'collectives'):
+        print('\n## Collective mix (per device)\n')
+        print(collective_mix(args.tag))
+
+
+if __name__ == '__main__':
+    main()

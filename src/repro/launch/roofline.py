@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
+"""Roofline analysis per (arch x shape x mesh) from the compiled dry-run.
+
+Three terms, in seconds (v5e):
+    compute    = HLO_FLOPs_global / (chips * 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes_global / (chips * 819e9 B/s HBM)
+    collective = collective_bytes_global / (chips * 50e9 B/s per-link ICI)
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+*per-device* numbers, so term = per_device_value / per_chip_rate — identical
+to the global formula.
+
+Scan-count calibration: XLA counts a while-loop body once (not x trip
+count), so every scan-based model under-reports.  Each cell is therefore
+also compiled at n_layers in {1, 2} with ALL model scans unrolled
+(models/scanutil.py) and the counts extrapolated linearly:
+
+    value(L) = value(1) + (L - 1) * (value(2) - value(1))
+
+which is exact because every per-layer quantity here is layer-independent
+(uniform stacks; hybrid global-vs-window layers compute identical FLOPs).
+The full-depth compile still provides memory analysis + the compile gate.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --all
+  PYTHONPATH=src python -m repro.launch.roofline --arch yi-6b --shape train_4k
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (1 link per chip budgeted)
+
+REPORT_DIR = Path(__file__).resolve().parents[3] / 'experiments' / 'roofline'
+
+
+def _counts(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    from repro.launch.dryrun import collective_bytes
+    coll = collective_bytes(compiled.as_text())
+    return {
+        'flops': float(ca.get('flops', 0.0)),
+        'bytes': float(ca.get('bytes accessed', 0.0)),
+        'transcendentals': float(ca.get('transcendentals', 0.0)),
+        'coll_bytes': float(coll['total_bytes']),
+        'coll_detail': coll['bytes'],
+        'coll_counts': coll['counts'],
+    }
+
+
+def calibrated_counts(arch: str, shape: str, multi_pod: bool,
+                      opt: dict | None, n_layers_full: int) -> dict:
+    """Two-point unrolled compiles -> exact linear-in-L extrapolation."""
+    from repro.launch.dryrun import lower_cell
+    from repro.models.scanutil import unrolled_scans
+    pts = {}
+    for L in (1, 2):
+        o = dict(opt or {})
+        o['n_layers'] = L
+        with unrolled_scans():
+            _, compiled, _ = lower_cell(arch, shape, multi_pod, o)
+        pts[L] = _counts(compiled)
+    body = {k: pts[2][k] - pts[1][k] for k in ('flops', 'bytes',
+                                               'coll_bytes')}
+    out = {k: pts[1][k] + (n_layers_full - 1) * body[k]
+           for k in body}
+    out['per_layer'] = body
+    out['intercept'] = {k: pts[1][k] - body[k] for k in body}
+    return out
+
+
+def analytic_model_flops(cfg, shape: str) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params.
+
+    Per the assignment: the dense/MoE 'useful flops' yardstick, no
+    attention quadratic term — the ratio column then exposes remat +
+    attention + padding overheads explicitly."""
+    from repro.launch.shapes import SHAPES
+    from repro.models.params import param_count
+    import dataclasses
+    sp = SHAPES[shape]
+    n_total = param_count(
+        dataclasses.replace(cfg, model_axis=1))     # unpadded param count
+    if cfg.moe is not None:
+        m = cfg.moe
+        fe = m.d_expert or cfg.d_ff
+        per_expert = 3 * cfg.d_model * fe
+        inactive = (m.n_experts - m.top_k) * per_expert * cfg.n_layers
+        n_active = n_total - inactive
+    else:
+        n_active = n_total
+    tokens = (sp.global_batch * sp.seq_len if sp.program != 'decode'
+              else sp.global_batch)
+    mult = 6.0 if sp.program == 'train' else 2.0
+    return mult * n_active * tokens
+
+
+def roofline_cell(arch: str, shape: str, multi_pod: bool = False,
+                  opt: dict | None = None, tag: str = 'baseline') -> dict:
+    from repro.configs import get_config
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    t0 = time.time()
+    cell = run_cell(arch, shape, multi_pod, opt, tag)    # full-L gate
+    if cell['status'] != 'ok':
+        return cell
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    cfg = get_config(arch, model_axis=mesh.shape['model'])
+
+    cal = calibrated_counts(arch, shape, multi_pod, opt, cfg.n_layers)
+    t_compute = cal['flops'] / PEAK_FLOPS
+    t_memory = cal['bytes'] / HBM_BW
+    t_coll = cal['coll_bytes'] / ICI_BW
+    terms = {'compute': t_compute, 'memory': t_memory,
+             'collective': t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_fl = analytic_model_flops(cfg, shape)
+    hlo_global = cal['flops'] * chips
+    cell.update({
+        'chips': chips,
+        'calibrated': {k: cal[k] for k in ('flops', 'bytes', 'coll_bytes')},
+        'per_layer': cal['per_layer'],
+        'terms_s': terms,
+        'dominant': dominant,
+        'bound_s': bound,
+        'roofline_fraction': (t_compute / bound) if bound > 0 else 0.0,
+        'model_flops': model_fl,
+        'hlo_flops_global': hlo_global,
+        'useful_ratio': model_fl / hlo_global if hlo_global else 0.0,
+        'analysis_s': round(time.time() - t0, 1),
+    })
+    return cell
+
+
+def save(cell: dict) -> Path:
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{cell['arch']}_{cell['shape']}_{cell['mesh']}_{cell['tag']}.json"
+    p = REPORT_DIR / name
+    p.write_text(json.dumps(cell, indent=1))
+    return p
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default=None)
+    ap.add_argument('--shape', default=None)
+    ap.add_argument('--multi-pod', action='store_true')
+    ap.add_argument('--all', action='store_true')
+    ap.add_argument('--tag', default='baseline')
+    ap.add_argument('--opt', default='{}')
+    args = ap.parse_args()
+    opt = json.loads(args.opt)
+
+    from repro.configs import all_arch_ids
+    from repro.launch.shapes import SHAPES
+    archs = all_arch_ids() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    fails = 0
+    for arch in archs:
+        for shape in shapes:
+            print(f'=== roofline {arch} x {shape} ===', flush=True)
+            cell = roofline_cell(arch, shape, args.multi_pod, opt, args.tag)
+            p = save(cell)
+            if cell['status'] == 'ok':
+                t = cell['terms_s']
+                print(f"  compute={t['compute']:.4f}s memory={t['memory']:.4f}s "
+                      f"collective={t['collective']:.4f}s "
+                      f"dominant={cell['dominant']} "
+                      f"useful={cell['useful_ratio']:.2f} [{p.name}]",
+                      flush=True)
+            else:
+                print(f"  {cell['status']}: {cell.get('reason', '')[:120]}"
+                      f"{cell.get('error', '')[:300]}", flush=True)
+                fails += cell['status'] == 'failed'
+    return 1 if fails else 0
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())

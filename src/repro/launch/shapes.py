@@ -1,0 +1,72 @@
+"""Assigned input shapes x program selection for the dry-run matrix.
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill
+    decode_32k   seq 32,768  global_batch 128   -> decode_step (KV = 32k)
+    long_500k    seq 524,288 global_batch 1     -> decode_step (sub-quadratic
+                                                   archs only — SSM/SWA)
+
+`input_specs` returns weak-type-correct ShapeDtypeStructs: the dry-run
+lowers and compiles without allocating any input or parameter memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    program: str              # train | prefill | decode
+
+
+SHAPES = {
+    'train_4k': ShapeSpec('train_4k', 4096, 256, 'train'),
+    'prefill_32k': ShapeSpec('prefill_32k', 32768, 32, 'prefill'),
+    'decode_32k': ShapeSpec('decode_32k', 32768, 128, 'decode'),
+    'long_500k': ShapeSpec('long_500k', 524288, 1, 'decode'),
+}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k requires a sub-quadratic path (DESIGN.md §6 skip table)."""
+    if shape == 'long_500k':
+        return cfg.supports_long_context
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    sp = SHAPES[shape]
+    B, S = sp.global_batch, sp.seq_len
+    i32 = jnp.int32
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+
+    if sp.program == 'train':
+        specs = {'tokens': jax.ShapeDtypeStruct(tok_shape, i32)}
+        if cfg.n_prefix_tokens:
+            specs['prefix_embeds'] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_tokens, cfg.d_model), jnp.float32)
+        return specs
+
+    if sp.program == 'prefill':
+        specs = {'tokens': jax.ShapeDtypeStruct(tok_shape, i32)}
+        if cfg.n_prefix_tokens:
+            specs['prefix_embeds'] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_tokens, cfg.d_model), jnp.float32)
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    tok1 = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    return {
+        'tokens': jax.ShapeDtypeStruct(tok1, i32),
+        'cache': init_cache(cfg, B, S, abstract=True),
+    }

@@ -1,0 +1,104 @@
+"""LM training launcher: synchronous data-parallel/TP trainer with
+checkpoint/restart and (optional) int8 error-feedback grad compression.
+
+On a real fleet this runs once per host under `jax.distributed`; on CPU it
+drives smoke-scale configs end to end (examples/lm_train.py uses it).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ck --ckpt-every 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokens
+from repro.models.params import init_params, param_count
+from repro.runtime.database import critical_data_key
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.optimizer import adamw_init
+from repro.train.step import train_step
+
+
+def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
+               ckpt_dir: str | None = None, ckpt_every: int = 0,
+               compress: bool = False, seed: int = 0,
+               log_every: int = 10, remat: bool = True):
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw_init(params)
+    err = None
+    run_key = critical_data_key(arch=cfg.name, lr=lr, seed=seed,
+                                compress=compress)
+    start = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, opt), start = restore_checkpoint(
+            ckpt_dir, (params, opt), run_key=run_key)
+        print(f'restored checkpoint at step {start}')
+
+    step_fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, lr=lr,
+                                                 remat=remat))
+    step_c = jax.jit(lambda p, o, b, e: train_step(
+        p, o, b, cfg, lr=lr, compress=True, error_state=e, remat=remat))
+    if compress:
+        err = jax.tree.map(lambda p: np.zeros(p.shape, np.float32), params)
+
+    data = SyntheticTokens(cfg.vocab, batch, seq, seed=seed,
+                           n_codebooks=cfg.n_codebooks)
+    it = iter(data)
+    for _ in range(start):                      # deterministic data replay
+        next(it)
+
+    history = []
+    t0 = time.time()
+    for step in range(start, steps):
+        batch_np = next(it)
+        if compress:
+            params, opt, err, metrics = step_c(params, opt, batch_np, err)
+        else:
+            params, opt, metrics = step_fn(params, opt, batch_np)
+        loss = float(metrics['loss'])
+        history.append(loss)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            dt = time.time() - t0
+            print(f'step {step:5d} loss {loss:.4f} '
+                  f'gnorm {float(metrics["gnorm"]):.3f} '
+                  f'({dt / max(step - start + 1, 1):.2f}s/step)', flush=True)
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, (params, opt), run_key)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, (params, opt), run_key)
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', required=True)
+    ap.add_argument('--smoke', action='store_true')
+    ap.add_argument('--steps', type=int, default=100)
+    ap.add_argument('--batch', type=int, default=8)
+    ap.add_argument('--seq', type=int, default=128)
+    ap.add_argument('--lr', type=float, default=3e-4)
+    ap.add_argument('--ckpt-dir', default=None)
+    ap.add_argument('--ckpt-every', type=int, default=0)
+    ap.add_argument('--compress', action='store_true')
+    ap.add_argument('--seed', type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    print(f'{cfg.name}: {param_count(cfg):,} params')
+    _, history = train_loop(cfg, steps=args.steps, batch=args.batch,
+                            seq=args.seq, lr=args.lr,
+                            ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.ckpt_every,
+                            compress=args.compress, seed=args.seed)
+    print(json.dumps({'first_loss': history[0], 'last_loss': history[-1]}))
+
+
+if __name__ == '__main__':
+    main()

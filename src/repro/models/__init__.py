@@ -1,0 +1,13 @@
+"""LM-family model stack: the multi-pod substrate the framework must serve.
+
+Pure-functional JAX models (no framework deps): a config dataclass, a
+parameter-spec factory (shapes + logical sharding axes), and jit-able
+`loss_fn` / `prefill` / `decode_step` functions.  All ten assigned
+architectures are instances of one composable decoder (`transformer.py`)
+with pluggable sequence mixers (GQA attention / WKV6 / Mamba-SSM / parallel
+hybrid) and channel mixers (SwiGLU MLP / MoE).
+"""
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models import transformer
+
+__all__ = ['ModelConfig', 'MoEConfig', 'transformer']

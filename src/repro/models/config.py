@@ -1,0 +1,136 @@
+"""Model configuration.
+
+A single dataclass describes every assigned architecture; `derived` fields
+handle the mesh-divisibility padding (heads/vocab) that a fixed (data=16,
+model=16) production mesh imposes — the Megatron-style answer to "40 heads
+on a 16-way tensor axis" is to pad heads (zero rows in wo make padding
+exact), and vocab is padded to a multiple of 256 as usual.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # DeepSeek-style always-on shared experts
+    d_expert: int = 0            # expert hidden size (0 -> d_ff)
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                 # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    seq_mixer: str = 'attention'   # attention | rwkv6 | hybrid(attn+ssm)
+    window: int = 0              # sliding-window size (0 = full attention)
+    global_layer_every: int = 0  # hybrid: every k-th layer uses full attn
+    qkv_bias: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm_state: int = 0           # SSM state size (hybrid/ssm families)
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    n_codebooks: int = 0         # audio (musicgen): codebooks per step
+    n_prefix_tokens: int = 0     # vlm: stubbed frontend embedding count
+    # mesh divisibility (overridden by launch when mesh differs)
+    model_axis: int = 16
+    # ---- performance knobs (§Perf hillclimb; defaults = paper-faithful
+    # baseline recorded in EXPERIMENTS.md) ------------------------------
+    mha_identity: bool = False    # MHA: pad kv with q, skip the GQA gather
+    attn_scores_f32: bool = True  # False: bf16 scores/probs (halves bytes)
+    remat_policy: str = 'nothing' # nothing | dots | none
+    moe_group: int = 2048         # MoE dispatch group (expert-weight
+                                  # streaming traffic ~ tokens/moe_group)
+    moe_dispatch: str = 'einsum'  # einsum (GShard baseline) | gather
+                                  # (sparse-AO-style index dispatch, §Perf)
+    rwkv_bf16_chunk: bool = False # bf16 pairwise-decay tensors in the
+                                  # chunked linear scans (halves their bytes)
+    fused_norm: bool = False      # RMSNorm variance via f32-accumulating
+                                  # einsum: no f32 (B,S,D) materialization
+
+    # ---- derived, mesh-aware sizes --------------------------------------
+    @property
+    def padded_heads(self) -> int:
+        if self.n_heads == 0:
+            return 0
+        return pad_to_multiple(self.n_heads, self.model_axis)
+
+    @property
+    def is_mha(self) -> bool:
+        return self.n_heads > 0 and self.n_kv_heads == self.n_heads
+
+    @property
+    def padded_kv_heads(self) -> int:
+        """KV heads are sharded only when they divide the model axis;
+        otherwise they are replicated (cheap: the KV projection is small),
+        so no padding is applied.  With mha_identity, KV pads alongside Q
+        so the head->kv gather disappears (and with it the KV all-gather
+        that dominates MHA decode collectives — EXPERIMENTS.md §Perf)."""
+        if self.mha_identity and self.is_mha:
+            return self.padded_heads
+        return self.n_kv_heads
+
+    @property
+    def kv_sharded(self) -> bool:
+        return (self.padded_kv_heads % self.model_axis == 0
+                and self.n_kv_heads > 0)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab, 256)
+
+    @property
+    def rwkv_heads(self) -> int:
+        """RWKV6 head count: d_model / 64, padded to the model axis."""
+        return pad_to_multiple(self.d_model // 64, self.model_axis)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic path for 500k decode: SSM state or sliding window."""
+        return (self.seq_mixer in ('rwkv6', 'hybrid')) or self.window > 0
+
+    # Above this context, hybrid archs drop their few global-attention
+    # layers to windowed (the long-context SWA+SSM mode); below it, decode
+    # keeps the full cache and masks per layer — exact serving.
+    long_swa_threshold: int = 65536
+
+    @property
+    def decode_cache_len(self):
+        """Per-layer KV length at decode: window-bounded if SWA."""
+        def fn(seq_len: int) -> int:
+            if self.seq_mixer == 'rwkv6':
+                return 0
+            if not self.window:
+                return seq_len
+            if self.global_layer_every and seq_len <= self.long_swa_threshold:
+                return seq_len          # exact: global layers need it all
+            return min(seq_len, self.window)
+        return fn
+
+    def check(self):
+        assert self.d_ff % self.model_axis == 0 or (
+            self.moe and self.moe.n_experts % self.model_axis == 0), \
+            f'{self.name}: d_ff {self.d_ff} not shardable'
+        if self.moe:
+            ep = self.moe.n_experts % self.model_axis == 0
+            d_exp = self.moe.d_expert or self.d_ff
+            assert ep or d_exp % self.model_axis == 0, \
+                f'{self.name}: MoE not shardable (EP nor TP)'
+        return self

@@ -1,0 +1,228 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (full/windowed/chunked/decode),
+SwiGLU MLP.  Pure functions; bf16 activations, f32 params cast at use.
+
+GQA is implemented via a head->kv-head *gather map* instead of reshape-
+grouping, so any (padded_heads, n_kv_heads) combination works — including
+padding-to-mesh head counts that break the usual `heads % kv == 0` reshape
+(see config.py).  Padded heads have zero `wo` rows, so they contribute
+exactly nothing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.models.scanutil import scan as _scan
+
+from repro.models.config import ModelConfig
+
+ACT_DTYPE = jnp.bfloat16
+NEG_INF = -1e9
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_fused(x, scale, eps):
+    var = (jnp.einsum('...d,...d->...', x, x,
+                      preferred_element_type=jnp.float32)[..., None]
+           / x.shape[-1])
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def _rmsf_fwd(x, scale, eps):
+    var = (jnp.einsum('...d,...d->...', x, x,
+                      preferred_element_type=jnp.float32)[..., None]
+           / x.shape[-1])
+    inv = jax.lax.rsqrt(var + eps)                 # (..., 1) f32 — tiny
+    return x * inv.astype(x.dtype) * scale.astype(x.dtype), (x, scale, inv)
+
+
+def _rmsf_bwd(eps, res, g):
+    """All (..., D) tensors stay in x.dtype (bf16): only the two per-token
+    reductions accumulate in f32.  This is what actually removes the f32
+    activation traffic — autodiff of the mixed-dtype forward promotes its
+    cotangents to f32 (§Perf iteration log)."""
+    x, scale, inv = res
+    D = x.shape[-1]
+    sb = scale.astype(x.dtype)
+    invb = inv.astype(x.dtype)
+    # s1 = sum_d g * scale * x   (f32 accumulation, (..., 1))
+    s1 = jnp.einsum('...d,...d->...', g * sb, x,
+                    preferred_element_type=jnp.float32)[..., None]
+    coef = (s1 * (inv ** 3) / D).astype(x.dtype)
+    dx = g * sb * invb - x * coef
+    dscale = jnp.einsum('...d,...d->d', g.astype(jnp.float32),
+                        (x * invb).astype(jnp.float32))
+    return dx, dscale.astype(scale.dtype)
+
+
+_rmsnorm_fused.defvjp(_rmsf_fwd, _rmsf_bwd)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float,
+            fused: bool = False) -> jnp.ndarray:
+    if fused:
+        # §Perf: no (B, S, D) f32 tensor in fwd OR bwd (custom VJP).  The
+        # HLO dump showed f32 norm/residual activations were the #1 byte
+        # source in every train cell (350 GB/layer/device on yi-6b).
+        return _rmsnorm_fused(x, scale, eps)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def head_kv_map(cfg: ModelConfig):
+    """(padded_heads,) -> kv head index; padded heads map to kv 0.
+
+    Returns None when the map is the identity (MHA with mha_identity
+    padding) — callers then skip the gather entirely, which both avoids
+    materializing the head-expanded KV and, when KV is sharded, removes
+    the KV all-gather from the decode path (§Perf)."""
+    if cfg.padded_kv_heads == cfg.padded_heads:
+        return None
+    g = max(cfg.n_heads // max(cfg.n_kv_heads, 1), 1)
+    idx = jnp.arange(cfg.padded_heads) // g
+    return jnp.minimum(idx, cfg.n_kv_heads - 1).astype(jnp.int32)
+
+
+def _expand_kv(cfg: ModelConfig, k, axis: int = 2):
+    """Head-expand kv along `axis` unless the map is identity."""
+    hk = head_kv_map(cfg)
+    if hk is None:
+        return k
+    return jnp.take(k, hk, axis=axis)
+
+
+def _score_dtype(cfg: ModelConfig):
+    return jnp.float32 if cfg.attn_scores_f32 else jnp.bfloat16
+
+
+def qkv_project(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray):
+    """x: (B, S, D) -> q (B,S,Hp,hd), k/v (B,S,Hkv,hd) with RoPE applied."""
+    dt = x.dtype
+    q = jnp.einsum('bsd,dhk->bshk', x, p['wq'].astype(dt))
+    k = jnp.einsum('bsd,dhk->bshk', x, p['wk'].astype(dt))
+    v = jnp.einsum('bsd,dhk->bshk', x, p['wv'].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p['bq'].astype(dt)
+        k = k + p['bk'].astype(dt)
+        v = v + p['bv'].astype(dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, window: int) -> jnp.ndarray:
+    """(…, Sq, Sk) additive mask: causal + optional sliding window."""
+    causal = q_pos[..., :, None] >= k_pos[..., None, :]
+    ok = causal
+    if window:
+        ok = ok & (q_pos[..., :, None] - k_pos[..., None, :] < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attention(cfg: ModelConfig, q, k, v, positions, window: int,
+              q_chunk: int = 0):
+    """Causal GQA attention.  q: (B,S,Hp,hd), k/v: (B,S,Hkv,hd).
+
+    q_chunk > 0 scans over query blocks, bounding the live score tensor to
+    (B, Hp, q_chunk, S) — the pure-jnp stand-in for the flash kernel
+    (`kernels/flash_attention` is the TPU hot path)."""
+    kf = _expand_kv(cfg, k)                   # (B, S, Hp|Hkv, hd)
+    vf = _expand_kv(cfg, v)
+    scale = cfg.head_dim ** -0.5
+    sdt = _score_dtype(cfg)
+
+    # identity-kv (MHA) or expanded-kv share one einsum head layout
+    if not q_chunk or q.shape[1] <= q_chunk:
+        scores = jnp.einsum('bqhk,bshk->bhqs', q, kf,
+                            preferred_element_type=sdt) * scale
+        scores = scores + _mask_bias(positions, positions,
+                                     window)[:, None].astype(sdt)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum('bhqs,bshk->bqhk', probs, vf)
+
+    B, S, Hp, hd = q.shape
+    nc = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    qc = q.reshape(B, nc, q_chunk, Hp, hd).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(B, nc, q_chunk).transpose(1, 0, 2)
+
+    def body(_, xs):
+        qi, pi = xs                            # (B, qc, Hp, hd), (B, qc)
+        s = jnp.einsum('bqhk,bshk->bhqs', qi, kf,
+                       preferred_element_type=sdt) * scale
+        s = s + _mask_bias(pi, positions, window)[:, None].astype(sdt)
+        pr = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return _, jnp.einsum('bhqs,bshk->bqhk', pr, vf)
+
+    _, out = _scan(body, None, (qc, pc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, Hp, hd)
+
+
+def decode_attention(cfg: ModelConfig, q, k_cache, v_cache, cache_pos,
+                     q_pos, is_global=True):
+    """Single-token attention against a (ring-buffered when SWA) KV cache.
+
+    q: (B, 1, Hp, hd); k_cache/v_cache: (B, C, Hkv, hd); cache_pos: (B, C)
+    int32 absolute positions (-1 = empty slot); q_pos: () current position.
+    When the cache is longer than the window (exact hybrid serving), SWA
+    layers additionally mask entries older than the window; `is_global`
+    may be a traced bool (scanned per layer).
+    """
+    kf = _expand_kv(cfg, k_cache)
+    vf = _expand_kv(cfg, v_cache)
+    scale = cfg.head_dim ** -0.5
+    sdt = _score_dtype(cfg)
+    scores = jnp.einsum('bqhk,bshk->bhqs', q, kf,
+                        preferred_element_type=sdt) * scale
+    valid = cache_pos >= 0
+    if cfg.window:
+        in_window = (q_pos - cache_pos) < cfg.window
+        valid = valid & (in_window | jnp.asarray(is_global))
+    scores = jnp.where(valid[:, None, None, :], scores,
+                       jnp.asarray(NEG_INF, sdt))
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum('bhqs,bshk->bqhk', probs, vf)
+
+
+def attn_out(p: dict, heads: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, Hp, hd) @ wo (Hp, hd, D) -> (B, S, D)."""
+    return jnp.einsum('bshk,hkd->bsd', heads, p['wo'].astype(heads.dtype))
+
+
+# ---------------------------------------------------------------------------
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    dt = x.dtype
+    g = jnp.einsum('bsd,df->bsf', x, p['w_gate'].astype(dt))
+    u = jnp.einsum('bsd,df->bsf', x, p['w_up'].astype(dt))
+    return jnp.einsum('bsf,fd->bsd', jax.nn.silu(g) * u,
+                      p['w_down'].astype(dt))

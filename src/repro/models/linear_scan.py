@@ -1,0 +1,192 @@
+"""Chunked linear-recurrence mixers: RWKV6 (Finch) and Mamba2-style SSM.
+
+Both are linear attention with decay:
+
+    RWKV6:  S_t = diag(w_t) S_{t-1} + k_t v_t^T          (per-channel decay)
+            y_t = r_t^T S_{t-1} + (r_t . (u*k_t)) v_t
+    SSM:    S_t = a_t S_{t-1} + dt_t B_t x_t^T           (per-head scalar)
+            y_t = C_t^T S_t
+
+The training path scans over chunks of length CHUNK: inside a chunk the
+recurrence is evaluated in *parallel matrix form* whose every exponent is a
+cumulative log-decay difference <= 0 — numerically safe in f32 with no
+factorized exp(+/-L) overflow (the standard chunked-GLA pitfall).  The
+inter-chunk state is the only sequential dependency, so remat checkpoints
+one (d x d) state per chunk instead of per token.
+
+`kernels/wkv` carries the same chunk body as a Pallas TPU kernel; this file
+is its reference and the dry-run lowering path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.models.scanutil import scan as _scan
+
+CHUNK = 64
+MIN_LOG_W = -8.0       # clamp per-step log-decay (w in [e^-8, 1))
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+def rwkv6_chunk(r, k, v, log_w, u, S0, bf16_pair: bool = False):
+    """One chunk, per (batch*head): r,k,v,log_w: (C, d); u: (d,); S0: (d,d).
+
+    Returns (y: (C, d), S_end: (d, d)).  All exponents <= 0.
+    bf16_pair stores the dominant (C, C, d) pairwise tensor in bf16
+    (values in [0, 1]; f32 accumulation in the einsum) — §Perf knob.
+    """
+    C = r.shape[0]
+    Lw = jnp.cumsum(log_w, axis=0)                     # (C, d) inclusive
+    P = jnp.concatenate([jnp.zeros_like(Lw[:1]), Lw[:-1]], axis=0)  # Lw_{t-1}
+
+    # pairwise decayed inner products A[t, i] = sum_c r_tc k_ic e^{P_t - Lw_i}
+    # mask folded INTO the exp argument (exp(-1e30) == 0): one (C, C, d)
+    # materialization instead of three (D3, exp, where) — §Perf iteration 2
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)       # strict lower: i < t
+    E = jnp.exp(jnp.where(tri[:, :, None],
+                          P[:, None, :] - Lw[None, :, :], -1e30))
+    if bf16_pair:
+        E = E.astype(jnp.bfloat16)
+        A = jnp.einsum('tc,ic,tic->ti', r.astype(jnp.bfloat16),
+                       k.astype(jnp.bfloat16), E,
+                       preferred_element_type=jnp.float32)
+    else:
+        A = jnp.einsum('tc,ic,tic->ti', r, k, E)       # (C, C)
+    y = A @ v                                          # intra-chunk history
+    y = y + (r * jnp.exp(P)) @ S0                      # initial state
+    y = y + jnp.sum(r * u[None] * k, axis=-1,
+                    keepdims=True) * v                 # current-token bonus
+
+    decay_end = jnp.exp(Lw[-1][:, None])               # (d, 1)
+    kd = k * jnp.exp(Lw[-1][None, :] - Lw)             # (C, d), <= 0 exps
+    S_end = decay_end * S0 + kd.T @ v
+    return y, S_end
+
+
+def rwkv6_scan(r, k, v, log_w, u, S0, chunk: int = CHUNK,
+               bf16_pair: bool = False):
+    """Full sequence via chunked scan. Shapes: (B, H, S, d) (+ u: (H, d),
+    S0: (B, H, d, d)).  Returns (y: (B,H,S,d), S_final)."""
+    B, H, S, d = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def reshape(x):
+        return x.reshape(B, H, nc, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    rs, ks, vs, ws = map(reshape, (r, k, v, log_w))
+
+    import functools
+    chunk_fn = functools.partial(rwkv6_chunk, bf16_pair=bf16_pair)
+    body = jax.vmap(jax.vmap(chunk_fn,
+                             in_axes=(0, 0, 0, 0, 0, 0)),   # heads
+                    in_axes=(0, 0, 0, 0, None, 0))          # batch
+
+    def step(S, xs):
+        rc, kc, vc, wc = xs                            # (B, H, C, d)
+        y, S_next = body(rc, kc, vc, wc, u, S)
+        return S_next, y
+
+    S_fin, ys = _scan(step, S0, (rs, ks, vs, ws))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, d)
+    return y, S_fin
+
+
+def rwkv6_decode(r, k, v, log_w, u, S):
+    """One token: r,k,v,log_w: (B,H,d); u: (H,d); S: (B,H,d,d)."""
+    y = jnp.einsum('bhc,bhcd->bhd', r, S)
+    y = y + jnp.sum(r * u[None] * k, axis=-1, keepdims=True) * v
+    S_next = jnp.exp(log_w)[..., None] * S + k[..., :, None] * v[..., None, :]
+    return y, S_next
+
+
+# ---------------------------------------------------------------------------
+# Mamba2-style scalar-decay SSM
+# ---------------------------------------------------------------------------
+def ssm_chunk(x, dt, la, Bv, Cv, S0):
+    """One chunk, per (batch*head): x: (C, hd); dt, la: (C,);
+    Bv, Cv: (C, N); S0: (N, hd).  la = log a_t <= 0."""
+    C = x.shape[0]
+    La = jnp.cumsum(la)                                # (C,) inclusive
+    D2 = La[:, None] - La[None, :]                     # (C, C), i<=t => <=0
+    tri = jnp.tril(jnp.ones((C, C), bool))             # include diagonal
+    E = jnp.where(tri, jnp.exp(D2), 0.0)
+    A = (Cv @ Bv.T) * E * dt[None, :]                  # (C, C)
+    y = A @ x
+    y = y + jnp.exp(La)[:, None] * (Cv @ S0)           # initial state
+
+    bd = Bv * (jnp.exp(La[-1] - La) * dt)[:, None]     # (C, N)
+    S_end = jnp.exp(La[-1]) * S0 + bd.T @ x
+    return y, S_end
+
+
+def ssm_scan(x, dt, la, Bv, Cv, S0, chunk: int = CHUNK):
+    """x: (B,H,S,hd); dt, la: (B,H,S); Bv,Cv: (B,S,N) shared across heads;
+    S0: (B,H,N,hd). Returns (y: (B,H,S,hd), S_final)."""
+    B, H, S, hd = x.shape
+    N = Bv.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xs = x.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+    dts = dt.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    las = la.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    Bs = Bv.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cs = Cv.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    body = jax.vmap(jax.vmap(ssm_chunk,
+                             in_axes=(0, 0, 0, None, None, 0)),  # heads
+                    in_axes=(0, 0, 0, 0, 0, 0))                  # batch
+
+    def step(S, xs_c):
+        xc, dtc, lac, Bc, Cc = xs_c
+        y, S_next = body(xc, dtc, lac, Bc, Cc, S)
+        return S_next, y
+
+    S_fin, ys = _scan(step, S0, (xs, dts, las, Bs, Cs))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    return y, S_fin
+
+
+def ssm_decode(x, dt, la, Bv, Cv, S):
+    """One token: x: (B,H,hd); dt, la: (B,H); Bv,Cv: (B,N); S: (B,H,N,hd)."""
+    S_next = (jnp.exp(la)[..., None, None] * S
+              + (dt[..., None, None]
+                 * Bv[:, None, :, None] * x[..., None, :]))
+    y = jnp.einsum('bn,bhnd->bhd', Cv, S_next)
+    return y, S_next
+
+
+# ---------------------------------------------------------------------------
+# Naive per-token references (oracles for tests)
+# ---------------------------------------------------------------------------
+def rwkv6_ref(r, k, v, log_w, u, S0):
+    """Token-by-token scan — the definitionally-correct oracle."""
+    def step(S, xs):
+        rt, kt, vt, wt = xs                            # (B, H, d)
+        y = jnp.einsum('bhc,bhcd->bhd', rt, S)
+        y = y + jnp.sum(rt * u[None] * kt, -1, keepdims=True) * vt
+        S = jnp.exp(wt)[..., None] * S + kt[..., :, None] * vt[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, log_w))
+    S_fin, ys = _scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 2), S_fin
+
+
+def ssm_ref(x, dt, la, Bv, Cv, S0):
+    def step(S, xs):
+        xt, dtt, lat, Bt, Ct = xs
+        S = (jnp.exp(lat)[..., None, None] * S
+             + dtt[..., None, None] * Bt[:, None, :, None]
+             * xt[..., None, :])
+        y = jnp.einsum('bn,bhnd->bhd', Ct, S)
+        return S, y
+
+    xs = (jnp.moveaxis(x, 2, 0), jnp.moveaxis(dt, 2, 0),
+          jnp.moveaxis(la, 2, 0), jnp.moveaxis(Bv, 1, 0),
+          jnp.moveaxis(Cv, 1, 0))
+    S_fin, ys = _scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 2), S_fin

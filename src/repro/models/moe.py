@@ -1,0 +1,165 @@
+"""Mixture-of-Experts channel mixer: capacity-based einsum dispatch.
+
+DESIGN.md §6: MoE dispatch is the LM-side reappearance of the paper's
+"dense stationary x sparse streaming" matmul — expert weights are the dense
+constant A, token-to-expert assignments the sparse per-step B.  Like the
+paper (and unlike sort-based dispatch) we keep the *expert weights* dense
+and stride-1 for the MXU, expressing the sparsity as a capacity-bounded
+one-hot dispatch tensor.
+
+Tokens are processed in groups (scan) so the (G, E, C) dispatch tensor — the
+analogue of the paper's per-electron-block gather — stays bounded regardless
+of global batch.  Two sharding regimes, chosen per config:
+  * EP: n_experts % model_axis == 0  -> experts sharded over 'model';
+  * TP: otherwise                    -> expert hidden dim sharded.
+Overflowed tokens (beyond capacity) fall through on the residual path, as
+in GShard/Switch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class MoEAux(NamedTuple):
+    load_balance: jnp.ndarray   # Switch aux loss (scalar)
+    router_z: jnp.ndarray       # z-loss (scalar)
+    dropped_frac: jnp.ndarray   # fraction of (token, rank) slots dropped
+
+
+def _dispatch(probs: jnp.ndarray, top_idx: jnp.ndarray,
+              top_p: jnp.ndarray, n_experts: int, capacity: int):
+    """Build (G, E, C) dispatch/combine tensors, rank-major priority.
+
+    probs: (G, E) full router probs; top_idx/top_p: (G, k).
+    """
+    G, k = top_idx.shape
+    dispatch = jnp.zeros((G, n_experts, capacity), jnp.bfloat16)
+    combine = jnp.zeros((G, n_experts, capacity), jnp.float32)
+    offset = jnp.zeros((n_experts,), jnp.int32)
+    kept = jnp.zeros((), jnp.float32)
+    for rank in range(k):                       # k is small and static
+        e = top_idx[:, rank]                    # (G,)
+        onehot = jax.nn.one_hot(e, n_experts, dtype=jnp.int32)  # (G, E)
+        pos = offset[None, :] + jnp.cumsum(onehot, axis=0) - 1  # (G, E)
+        pos_t = jnp.sum(pos * onehot, axis=1)   # (G,) position in expert
+        keep = pos_t < capacity
+        kept = kept + jnp.sum(keep)
+        slot = jax.nn.one_hot(jnp.where(keep, pos_t, capacity),
+                              capacity, dtype=jnp.bfloat16)     # (G, C)
+        d_r = onehot.astype(jnp.bfloat16)[:, :, None] * slot[:, None, :]
+        dispatch = dispatch + d_r
+        combine = combine + d_r.astype(jnp.float32) \
+            * top_p[:, rank][:, None, None]
+        offset = offset + jnp.sum(onehot, axis=0)
+    dropped = 1.0 - kept / (G * k)
+    return dispatch, combine, dropped
+
+
+def _positions(top_idx, n_experts: int, capacity: int):
+    """Rank-major position-in-expert for every (token, rank) assignment.
+
+    Returns (pos: (G, k) int32, keep: (G, k) bool, kept count)."""
+    G, k = top_idx.shape
+    pos = jnp.zeros((G, k), jnp.int32)
+    offset = jnp.zeros((n_experts,), jnp.int32)
+    kept = jnp.zeros((), jnp.float32)
+    keeps = []
+    for rank in range(k):
+        onehot = jax.nn.one_hot(top_idx[:, rank], n_experts,
+                                dtype=jnp.int32)
+        p_r = offset[None, :] + jnp.cumsum(onehot, axis=0) - 1
+        p_t = jnp.sum(p_r * onehot, axis=1)
+        keep = p_t < capacity
+        keeps.append(keep)
+        kept = kept + jnp.sum(keep)
+        pos = pos.at[:, rank].set(p_t)
+        offset = offset + jnp.sum(onehot, axis=0)
+    keep = jnp.stack(keeps, axis=1)
+    return pos, keep, 1.0 - kept / (G * k)
+
+
+def moe_ffn(p: dict, cfg: ModelConfig, x: jnp.ndarray,
+            group_size: int = 2048, capacity: int = 0):
+    """x: (B, S, D) -> (y: (B, S, D), MoEAux).  Scans over token groups.
+
+    capacity=0 -> the usual cf*G*k/E bound; decode passes G*k (zero drops
+    at tiny per-step batches, where a dropped token would corrupt output).
+
+    Dispatch formulations (cfg.moe_dispatch):
+      * 'einsum' — GShard one-hot (G,E,C) dispatch/combine matmuls;
+      * 'gather' — explicit index gather/scatter (§Perf: the paper's
+        sparse-AO insight applied to MoE — indices instead of 0/1 matmuls
+        cut dispatch FLOPs by ~E*C/k and drop the (G,E,C) tensors).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    G = min(group_size, T)
+    assert T % G == 0, (T, G)
+    xg = x.reshape(T // G, G, D)
+    capacity = capacity or (
+        int(m.capacity_factor * G * m.top_k / m.n_experts) or 1)
+    gather_mode = getattr(cfg, 'moe_dispatch', 'einsum') == 'gather'
+
+    def _experts(xe, dt):
+        g = jnp.einsum('ecd,edf->ecf', xe, p['w_gate'].astype(dt))
+        u = jnp.einsum('ecd,edf->ecf', xe, p['w_up'].astype(dt))
+        return jnp.einsum('ecf,efd->ecd', jax.nn.silu(g) * u,
+                          p['w_down'].astype(dt))
+
+    def one_group(xt):
+        logits = jnp.einsum('gd,de->ge', xt.astype(jnp.float32),
+                            p['router'].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_idx = jax.lax.top_k(probs, m.top_k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renorm
+        dt = xt.dtype
+
+        if gather_mode:
+            pos, keep, dropped = _positions(top_idx, m.n_experts, capacity)
+            # scatter tokens into their (expert, slot) buckets
+            flat_slot = jnp.where(keep,
+                                  top_idx * capacity + pos,
+                                  m.n_experts * capacity)      # overflow bin
+            xe = jnp.zeros((m.n_experts * capacity + 1, D), dt)
+            xe = xe.at[flat_slot.reshape(-1)].set(
+                jnp.repeat(xt, m.top_k, axis=0), mode='drop')
+            xe = xe[:-1].reshape(m.n_experts, capacity, D)
+            ye = _experts(xe, dt)
+            # gather each token's k expert outputs back, weight, sum
+            safe = jnp.minimum(flat_slot, m.n_experts * capacity - 1)
+            yt = ye.reshape(-1, D)[safe.reshape(-1)].reshape(G, m.top_k, D)
+            w = (top_p * keep).astype(dt)
+            y = jnp.einsum('gk,gkd->gd', w, yt)
+        else:
+            dispatch, combine, dropped = _dispatch(
+                probs, top_idx, top_p, m.n_experts, capacity)
+            xe = jnp.einsum('gec,gd->ecd', dispatch, xt)   # (E, C, D)
+            ye = _experts(xe, dt)
+            y = jnp.einsum('ecd,gec->gd', ye, combine.astype(dt))
+
+        # Switch load-balance: E * sum_e fraction_e * prob_e
+        assign1 = jax.nn.one_hot(top_idx[:, 0], m.n_experts)
+        frac = jnp.mean(assign1, axis=0)
+        pmean = jnp.mean(probs, axis=0)
+        lb = m.n_experts * jnp.sum(frac * pmean)
+        zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        return y, lb, zl, dropped
+
+    # vmap (not scan) over groups: batched einsums keep the MXU busy and —
+    # critically for the roofline — avoid XLA's count-loop-body-once cost
+    # analysis (see models/scanutil.py).
+    yg, lb, zl, dr = jax.vmap(one_group)(xg)
+    y = yg.reshape(B, S, D)
+    if m.n_shared:                              # DeepSeek shared experts
+        from repro.models.layers import swiglu
+        y = y + swiglu(p['shared'], x)
+    aux = MoEAux(load_balance=jnp.mean(lb), router_z=jnp.mean(zl),
+                 dropped_frac=jnp.mean(dr))
+    return y, aux

@@ -1,0 +1,223 @@
+"""Parameter specs: shapes + logical sharding axes, init, abstract trees.
+
+Every parameter is declared once as a ``ParamSpec`` (shape, logical axes,
+init scale).  From the same spec tree we derive:
+
+* ``abstract_params``  — ShapeDtypeStruct tree for the dry-run (.lower()
+  without allocating 32 B of weights);
+* ``init_params``      — real arrays for CPU smoke tests / examples;
+* ``partition_specs``  — jax.sharding.PartitionSpec tree via the logical->
+  mesh-axis rules in ``repro.sharding.partition``.
+
+Layer parameters are *stacked* with a leading 'layers' axis so the decoder
+runs as one ``lax.scan`` (fast compile, remat-friendly) — heterogeneous
+per-layer behaviour (global vs sliding attention) is driven by scanned
+boolean arrays, not by structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                  # logical axis name (or None) per dim
+    init: str = 'normal'         # normal | zeros | ones
+    scale: float = 1.0           # multiplier on fan-in init
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _attn_specs(cfg: ModelConfig, L: int) -> dict:
+    D, Hp, Hkv, hd = (cfg.d_model, cfg.padded_heads, cfg.padded_kv_heads,
+                      cfg.head_dim)
+    sp = {
+        'wq': ParamSpec((L, D, Hp, hd), ('layers', 'embed', 'heads', None)),
+        'wk': ParamSpec((L, D, Hkv, hd),
+                        ('layers', 'embed', 'kv_heads', None)),
+        'wv': ParamSpec((L, D, Hkv, hd),
+                        ('layers', 'embed', 'kv_heads', None)),
+        'wo': ParamSpec((L, Hp, hd, D), ('layers', 'heads', None, 'embed'),
+                        scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        sp['bq'] = ParamSpec((L, Hp, hd), ('layers', 'heads', None), 'zeros')
+        sp['bk'] = ParamSpec((L, Hkv, hd), ('layers', 'kv_heads', None),
+                             'zeros')
+        sp['bv'] = ParamSpec((L, Hkv, hd), ('layers', 'kv_heads', None),
+                             'zeros')
+    return sp
+
+
+def _mlp_specs(cfg: ModelConfig, L: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        'w_gate': ParamSpec((L, D, F), ('layers', 'embed', 'mlp')),
+        'w_up': ParamSpec((L, D, F), ('layers', 'embed', 'mlp')),
+        'w_down': ParamSpec((L, F, D), ('layers', 'mlp', 'embed'),
+                            scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, L: int) -> dict:
+    m = cfg.moe
+    D = cfg.d_model
+    Fe = m.d_expert or cfg.d_ff
+    E = m.n_experts
+    ep = E % cfg.model_axis == 0           # expert-parallel vs TP-in-expert
+    e_ax = 'experts' if ep else None
+    f_ax = None if ep else 'mlp'
+    sp = {
+        'router': ParamSpec((L, D, E), ('layers', 'embed', None),
+                            scale=0.1),
+        'w_gate': ParamSpec((L, E, D, Fe), ('layers', e_ax, 'embed', f_ax)),
+        'w_up': ParamSpec((L, E, D, Fe), ('layers', e_ax, 'embed', f_ax)),
+        'w_down': ParamSpec((L, E, Fe, D), ('layers', e_ax, f_ax, 'embed'),
+                            scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+    }
+    if m.n_shared:
+        Fs = m.n_shared * Fe
+        sp['shared'] = {
+            'w_gate': ParamSpec((L, D, Fs), ('layers', 'embed', 'mlp')),
+            'w_up': ParamSpec((L, D, Fs), ('layers', 'embed', 'mlp')),
+            'w_down': ParamSpec((L, Fs, D), ('layers', 'mlp', 'embed'),
+                                scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        }
+    return sp
+
+
+def _rwkv_specs(cfg: ModelConfig, L: int) -> dict:
+    """RWKV6 time-mix (data-dependent decay via low-rank ww) + channel-mix."""
+    D = cfg.d_model
+    RH, hd = cfg.rwkv_heads, 64
+    lora = 64
+    F = cfg.d_ff
+    return {
+        # token-shift interpolation coefficients (r, k, v, w, g)
+        'mu': ParamSpec((L, 5, D), ('layers', None, 'embed'), 'zeros'),
+        'wr': ParamSpec((L, D, RH, hd), ('layers', 'embed', 'heads', None)),
+        'wk': ParamSpec((L, D, RH, hd), ('layers', 'embed', 'heads', None)),
+        'wv': ParamSpec((L, D, RH, hd), ('layers', 'embed', 'heads', None)),
+        'wg': ParamSpec((L, D, RH, hd), ('layers', 'embed', 'heads', None)),
+        # data-dependent per-channel decay: w = exp(-exp(w0 + lora(x)))
+        'w0': ParamSpec((L, RH, hd), ('layers', 'heads', None), 'zeros'),
+        'ww1': ParamSpec((L, D, lora), ('layers', 'embed', None),
+                         scale=0.1),
+        'ww2': ParamSpec((L, lora, RH, hd), ('layers', None, 'heads', None),
+                         scale=0.1),
+        'u': ParamSpec((L, RH, hd), ('layers', 'heads', None), 'zeros'),
+        'wo': ParamSpec((L, RH, hd, D), ('layers', 'heads', None, 'embed'),
+                        scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        'ln_x': ParamSpec((L, RH, hd), ('layers', 'heads', None), 'ones'),
+        # channel mix
+        'mu_c': ParamSpec((L, 2, D), ('layers', None, 'embed'), 'zeros'),
+        'w_ck': ParamSpec((L, D, F), ('layers', 'embed', 'mlp')),
+        'w_cv': ParamSpec((L, F, D), ('layers', 'mlp', 'embed'),
+                          scale=1.0 / np.sqrt(2 * cfg.n_layers)),
+        'w_cr': ParamSpec((L, D, D), ('layers', 'embed', None)),
+    }
+
+
+def _ssm_specs(cfg: ModelConfig, L: int) -> dict:
+    """Mamba2-style selective SSM heads (hybrid: parallel with attention).
+
+    d_inner == padded_heads * head_dim so the SSM branch fuses with the
+    attention branch ahead of the shared output projection (Hymba)."""
+    D, Hp, hd, N = cfg.d_model, cfg.padded_heads, cfg.head_dim, cfg.ssm_state
+    return {
+        'w_x': ParamSpec((L, D, Hp, hd), ('layers', 'embed', 'heads', None)),
+        'w_dt': ParamSpec((L, D, Hp), ('layers', 'embed', 'heads'),
+                          scale=0.1),
+        'dt_bias': ParamSpec((L, Hp), ('layers', 'heads'), 'zeros'),
+        'a_log': ParamSpec((L, Hp), ('layers', 'heads'), 'zeros'),
+        'w_B': ParamSpec((L, D, N), ('layers', 'embed', None)),
+        'w_C': ParamSpec((L, D, N), ('layers', 'embed', None)),
+        'ssm_norm': ParamSpec((L, Hp, hd), ('layers', 'heads', None),
+                              'ones'),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """The full spec tree for one architecture."""
+    L, D, Vp = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    specs: dict = {'embed': {}, 'layers': {}, 'final_norm':
+                   ParamSpec((D,), ('embed',), 'ones')}
+    if cfg.n_codebooks:                     # musicgen: one table per codebook
+        specs['embed']['tokens'] = ParamSpec(
+            (cfg.n_codebooks, Vp, D), (None, 'vocab', 'embed'), scale=1.0)
+    else:
+        specs['embed']['tokens'] = ParamSpec((Vp, D), ('vocab', 'embed'))
+
+    lay = {'ln1': ParamSpec((L, D), ('layers', 'embed'), 'ones'),
+           'ln2': ParamSpec((L, D), ('layers', 'embed'), 'ones')}
+    if cfg.seq_mixer == 'rwkv6':
+        lay['rwkv'] = _rwkv_specs(cfg, L)
+    else:
+        lay['attn'] = _attn_specs(cfg, L)
+        if cfg.seq_mixer == 'hybrid':
+            lay['ssm'] = _ssm_specs(cfg, L)
+        if cfg.moe is not None:
+            lay['moe'] = _moe_specs(cfg, L)
+        else:
+            lay['mlp'] = _mlp_specs(cfg, L)
+    specs['layers'] = lay
+
+    if cfg.n_codebooks:
+        specs['lm_head'] = ParamSpec((cfg.n_codebooks, D, Vp),
+                                     (None, 'embed', 'vocab'))
+    elif not cfg.tie_embeddings:
+        specs['lm_head'] = ParamSpec((D, Vp), ('embed', 'vocab'))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+def tree_map_specs(fn: Callable[[ParamSpec], Any], specs: dict):
+    return jax.tree.map(fn, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct tree — the dry-run's zero-allocation stand-in."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), param_specs(cfg))
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Real initialization (CPU smoke tests & examples — small configs)."""
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+
+    def one(s: ParamSpec, k):
+        if s.init == 'zeros':
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == 'ones':
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        if len(s.shape) >= 3:   # (…, in, heads, hd) style: fan-in is dim -3
+            # heuristics: treat all but the last two dims as batch/layers
+            fan_in = s.shape[-3] if s.shape[-3] > 8 else s.shape[-2]
+        std = s.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, s.shape, jnp.float32) * std
+                ).astype(s.dtype)
+
+    return jax.tree.unflatten(treedef, [one(s, k)
+                                        for s, k in zip(leaves, keys)])
+
+
+def param_count(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    leaves = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)

@@ -1,0 +1,41 @@
+"""Scan wrapper with a global unroll switch (roofline calibration).
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, not
+multiplied by the trip count — so any scan-based model under-reports
+FLOPs/bytes structurally.  The roofline driver therefore compiles each cell
+twice at n_layers in {1, 2} with *every* model scan fully unrolled
+(straight-line HLO, exact counts) and extrapolates linearly in L; the real
+full-depth compile is used for memory analysis and collective structure.
+
+``scan()`` here is lax.scan unless the UNROLL flag is set by the
+calibration context.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def _unroll() -> bool:
+    return getattr(_state, 'unroll', False)
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    """Calibration context: all model scans become straight-line code."""
+    prev = getattr(_state, 'unroll', False)
+    _state.unroll = True
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan(body, init, xs, length=None):
+    if _unroll():
+        return jax.lax.scan(body, init, xs, length=length, unroll=True)
+    return jax.lax.scan(body, init, xs, length=length)

@@ -1,0 +1,465 @@
+"""The composable decoder: one scan-over-layers body serving all 10 archs.
+
+Modes:
+  * ``loss_fn``     — training forward + next-token CE (+ MoE aux losses);
+  * ``prefill``     — full-sequence forward emitting logits + decode cache;
+  * ``decode_step`` — one token against a (ring-buffered) cache / SSM state.
+
+Layer heterogeneity (global vs sliding-window attention in hybrids) is a
+scanned ``is_global`` boolean — structure stays uniform so the whole stack
+is a single ``lax.scan`` with per-layer remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from repro.models.scanutil import scan as _scan
+import numpy as np
+
+from repro.models import linear_scan as ls
+from repro.models.config import ModelConfig
+from repro.models.layers import (ACT_DTYPE, apply_rope, attention, attn_out,
+                                 decode_attention, qkv_project, rmsnorm,
+                                 swiglu)
+from repro.models.moe import moe_ffn
+
+MIN_LOG_W = ls.MIN_LOG_W
+
+
+def layer_is_global(cfg: ModelConfig) -> np.ndarray:
+    """(L,) bool: layer uses full attention (True) or the sliding window."""
+    L = cfg.n_layers
+    if cfg.window == 0:
+        return np.ones((L,), bool)
+    if cfg.global_layer_every:
+        return (np.arange(L) % cfg.global_layer_every) == 0
+    return np.zeros((L,), bool)
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray] = None):
+    """RWKV token shift: previous token's activations (zeros/state at t=0)."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block
+# ---------------------------------------------------------------------------
+def _rwkv_proj(p, cfg, x, shift_prev):
+    """Shared by train/prefill/decode: project to r,k,v,g,log_w heads."""
+    dt = x.dtype
+    RH, hd = cfg.rwkv_heads, 64
+    xx = _shift(x, shift_prev)
+    xr, xk, xv, xw, xg = [_lerp(x, xx, p['mu'][i]) for i in range(5)]
+    r = jnp.einsum('bsd,dhk->bhsk', xr, p['wr'].astype(dt))
+    k = jnp.einsum('bsd,dhk->bhsk', xk, p['wk'].astype(dt))
+    v = jnp.einsum('bsd,dhk->bhsk', xv, p['wv'].astype(dt))
+    g = jnp.einsum('bsd,dhk->bhsk', xg, p['wg'].astype(dt))
+    lw_lora = jnp.einsum('bsd,dl,lhk->bhsk', xw.astype(jnp.float32),
+                         p['ww1'], p['ww2'])
+    log_w = -jnp.exp(p['w0'][None, :, None, :] + lw_lora)
+    log_w = jnp.clip(log_w, MIN_LOG_W, -1e-6)
+    return (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), g, log_w)
+
+
+def _rwkv_out(p, cfg, y, g, B, S):
+    """Per-head RMS norm, gate, output projection."""
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * p['ln_x'][None, :, None, :]
+    y = y.astype(ACT_DTYPE) * jax.nn.silu(g)
+    return jnp.einsum('bhsk,hkd->bsd', y, p['wo'].astype(ACT_DTYPE))
+
+
+def rwkv_time_mix(p, cfg, x, state=None):
+    """Training/prefill path.  x: (B,S,D).  Returns (out, final states)."""
+    B, S, _ = x.shape
+    RH, hd = cfg.rwkv_heads, 64
+    r, k, v, g, log_w = _rwkv_proj(p, cfg, x, None if state is None
+                                   else state['shift_tm'])
+    S0 = (jnp.zeros((B, RH, hd, hd), jnp.float32) if state is None
+          else state['wkv'])
+    bf16p = cfg.rwkv_bf16_chunk
+    pad = (-S) % ls.CHUNK
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        r_, k_, v_ = zf(r), zf(k), zf(v)
+        lw_ = jnp.pad(log_w, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                      constant_values=-1e-6)
+        y, S_fin = ls.rwkv6_scan(r_, k_, v_, lw_, p['u'], S0,
+                                 bf16_pair=bf16p)
+        y = y[:, :, :S]
+    else:
+        y, S_fin = ls.rwkv6_scan(r, k, v, log_w, p['u'], S0,
+                                 bf16_pair=bf16p)
+    out = _rwkv_out(p, cfg, y, g, B, S)
+    return out, {'wkv': S_fin, 'shift_tm': x[:, -1, :]}
+
+
+def rwkv_time_mix_decode(p, cfg, x, state):
+    """x: (B,1,D)."""
+    B = x.shape[0]
+    r, k, v, g, log_w = _rwkv_proj(p, cfg, x, state['shift_tm'])
+    y, S_next = ls.rwkv6_decode(r[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                log_w[:, :, 0], p['u'], state['wkv'])
+    out = _rwkv_out(p, cfg, y[:, :, None, :], g, B, 1)
+    return out, {'wkv': S_next, 'shift_tm': x[:, -1, :]}
+
+
+def rwkv_channel_mix(p, cfg, x, shift_prev=None):
+    dt = x.dtype
+    xx = _shift(x, shift_prev)
+    xk = _lerp(x, xx, p['mu_c'][0])
+    xr = _lerp(x, xx, p['mu_c'][1])
+    k = jnp.einsum('bsd,df->bsf', xk, p['w_ck'].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum('bsf,fd->bsd', k, p['w_cv'].astype(dt))
+    return jax.nn.sigmoid(
+        jnp.einsum('bsd,de->bse', xr, p['w_cr'].astype(dt))) * kv
+
+
+# ---------------------------------------------------------------------------
+# Hybrid SSM branch (Hymba)
+# ---------------------------------------------------------------------------
+def _ssm_proj(p, cfg, xn):
+    dt_ = xn.dtype
+    xs = jnp.einsum('bsd,dhk->bhsk', xn, p['w_x'].astype(dt_))
+    dt = jax.nn.softplus(
+        jnp.einsum('bsd,dh->bsh', xn.astype(jnp.float32), p['w_dt'])
+        + p['dt_bias'][None, None, :])                 # (B,S,H)
+    la = -dt * jnp.exp(p['a_log'])[None, None, :]      # log a_t <= 0
+    la = jnp.clip(la, MIN_LOG_W, -1e-6)
+    Bv = jnp.einsum('bsd,dn->bsn', xn.astype(jnp.float32), p['w_B'])
+    Cv = jnp.einsum('bsd,dn->bsn', xn.astype(jnp.float32), p['w_C'])
+    return (xs.astype(jnp.float32), dt.transpose(0, 2, 1),
+            la.transpose(0, 2, 1), Bv, Cv)
+
+
+def _ssm_norm(p, y):
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + 1e-5)
+            * p['ssm_norm'][None, :, None, :]).astype(ACT_DTYPE)
+
+
+def ssm_branch(p, cfg, xn, state=None):
+    """Training/prefill.  xn: (B,S,D) -> (B,S,Hp,hd) head outputs."""
+    B, S, _ = xn.shape
+    Hp, hd, N = cfg.padded_heads, cfg.head_dim, cfg.ssm_state
+    xs, dt, la, Bv, Cv = _ssm_proj(p, cfg, xn)
+    S0 = (jnp.zeros((B, Hp, N, hd), jnp.float32) if state is None
+          else state)
+    pad = (-S) % ls.CHUNK
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        la = jnp.pad(la, ((0, 0), (0, 0), (0, pad)), constant_values=-1e-6)
+        Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+        Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+        y, S_fin = ls.ssm_scan(xs, dt, la, Bv, Cv, S0)
+        y = y[:, :, :S]
+    else:
+        y, S_fin = ls.ssm_scan(xs, dt, la, Bv, Cv, S0)
+    y = _ssm_norm(p, y)
+    return jnp.transpose(y, (0, 2, 1, 3)), S_fin       # (B,S,Hp,hd)
+
+
+def ssm_branch_decode(p, cfg, xn, state):
+    xs, dt, la, Bv, Cv = _ssm_proj(p, cfg, xn)
+    y, S_next = ls.ssm_decode(xs[:, :, 0], dt[:, :, 0], la[:, :, 0],
+                              Bv[:, 0], Cv[:, 0], state)
+    y = _ssm_norm(p, y[:, :, None, :])
+    return jnp.transpose(y, (0, 2, 1, 3)), S_next
+
+
+# ---------------------------------------------------------------------------
+# One decoder layer (train / prefill path)
+# ---------------------------------------------------------------------------
+def layer_fwd(cfg: ModelConfig, pl: dict, x, positions, is_global,
+              q_chunk: int, want_cache: bool):
+    """x: (B,S,D). Returns (x', cache_entry dict)."""
+    cache = {}
+    aux = {}
+    if cfg.seq_mixer == 'rwkv6':
+        h, tm_state = rwkv_time_mix(pl['rwkv'], cfg,
+                                    rmsnorm(x, pl['ln1'], cfg.norm_eps, cfg.fused_norm))
+        x = x + h
+        xn2 = rmsnorm(x, pl['ln2'], cfg.norm_eps, cfg.fused_norm)
+        x = x + rwkv_channel_mix(pl['rwkv'], cfg, xn2)
+        if want_cache:
+            cache = {'wkv': tm_state['wkv'], 'shift_tm': tm_state['shift_tm'],
+                     'shift_cm': xn2[:, -1, :]}
+        return x, cache, aux
+
+    xn = rmsnorm(x, pl['ln1'], cfg.norm_eps, cfg.fused_norm)
+    q, k, v = qkv_project(pl['attn'], cfg, xn, positions)
+    window = jnp.where(is_global, 0, cfg.window) if cfg.window else 0
+    # window must be static for the mask; use lax.cond-free trick: the mask
+    # bias is computed with the *configured* window and switched per layer.
+    if cfg.window:
+        heads_full = attention(cfg, q, k, v, positions, 0, q_chunk)
+        heads_win = attention(cfg, q, k, v, positions, cfg.window, q_chunk)
+        heads = jnp.where(is_global, heads_full, heads_win) \
+            if cfg.global_layer_every else heads_win
+    else:
+        heads = attention(cfg, q, k, v, positions, 0, q_chunk)
+
+    if cfg.seq_mixer == 'hybrid':
+        y_ssm, ssm_state = ssm_branch(pl['ssm'], cfg, xn)
+        heads = 0.5 * (heads + y_ssm)
+        if want_cache:
+            cache['ssm'] = ssm_state
+    x = x + attn_out(pl['attn'], heads)
+
+    xn2 = rmsnorm(x, pl['ln2'], cfg.norm_eps, cfg.fused_norm)
+    if cfg.moe is not None:
+        h, moe_aux = moe_ffn(pl['moe'], cfg, xn2,
+                             group_size=cfg.moe_group)
+        aux['lb'] = moe_aux.load_balance
+        aux['zl'] = moe_aux.router_z
+        x = x + h
+    else:
+        x = x + swiglu(pl['mlp'], xn2)
+
+    if want_cache:
+        C = cfg.decode_cache_len(k.shape[1])
+        cache['k'] = k[:, -C:].astype(ACT_DTYPE)
+        cache['v'] = v[:, -C:].astype(ACT_DTYPE)
+    return x, cache, aux
+
+
+def layer_decode(cfg: ModelConfig, pl: dict, x, pos, cache_l, slot,
+                 is_global=True):
+    """x: (B,1,D); cache_l: this layer's cache entries; slot: ring index."""
+    new_cache = {}
+    if cfg.seq_mixer == 'rwkv6':
+        state = {'wkv': cache_l['wkv'], 'shift_tm': cache_l['shift_tm']}
+        h, tm = rwkv_time_mix_decode(pl['rwkv'], cfg,
+                                     rmsnorm(x, pl['ln1'], cfg.norm_eps, cfg.fused_norm),
+                                     state)
+        x = x + h
+        xn2 = rmsnorm(x, pl['ln2'], cfg.norm_eps, cfg.fused_norm)
+        x = x + rwkv_channel_mix(pl['rwkv'], cfg, xn2,
+                                 shift_prev=cache_l['shift_cm'])
+        return x, {'wkv': tm['wkv'], 'shift_tm': tm['shift_tm'],
+                   'shift_cm': xn2[:, -1, :]}
+
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    xn = rmsnorm(x, pl['ln1'], cfg.norm_eps, cfg.fused_norm)
+    q, k, v = qkv_project(pl['attn'], cfg, xn, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l['k'], k.astype(cache_l['k'].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache_l['v'], v.astype(cache_l['v'].dtype), slot, axis=1)
+    heads = decode_attention(cfg, q, k_cache, v_cache, cache_l['pos'],
+                             pos, is_global)
+    if cfg.seq_mixer == 'hybrid':
+        y_ssm, ssm_state = ssm_branch_decode(pl['ssm'], cfg, xn,
+                                             cache_l['ssm'])
+        heads = 0.5 * (heads + y_ssm)
+        new_cache['ssm'] = ssm_state
+    x = x + attn_out(pl['attn'], heads)
+    xn2 = rmsnorm(x, pl['ln2'], cfg.norm_eps, cfg.fused_norm)
+    if cfg.moe is not None:
+        h, _ = moe_ffn(pl['moe'], cfg, xn2, group_size=x.shape[0],
+                       capacity=x.shape[0] * cfg.moe.top_k)  # zero drops
+        x = x + h
+    else:
+        x = x + swiglu(pl['mlp'], xn2)
+    new_cache['k'] = k_cache
+    new_cache['v'] = v_cache
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    emb = params['embed']['tokens']
+    if cfg.n_codebooks:                       # (B, S, ncb) token grid
+        x = 0.
+        for c in range(cfg.n_codebooks):
+            x = x + emb[c][tokens[..., c]]
+        return x.astype(ACT_DTYPE)
+    return emb[tokens].astype(ACT_DTYPE)
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    xf = x.astype(jnp.float32)
+    if cfg.n_codebooks:
+        return jnp.einsum('bsd,cdv->bscv', xf, params['lm_head'])
+    head = (params['embed']['tokens'].T if cfg.tie_embeddings
+            else params['lm_head'])
+    return jnp.einsum('bsd,dv->bsv', xf, head)
+
+
+# ---------------------------------------------------------------------------
+# Full forward passes
+# ---------------------------------------------------------------------------
+_REMAT_POLICIES = {
+    # paper-faithful baseline: minimal memory, maximal recompute
+    'nothing': lambda: jax.checkpoint_policies.nothing_saveable,
+    # §Perf: save matmul outputs (incl. attention probs @ v) — trades
+    # per-layer residency for a full forward recompute pass of S^2 traffic
+    'dots': lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    'none': None,
+}
+
+
+def _stack_scan(cfg, params, x, positions, q_chunk, want_cache,
+                remat: bool = True):
+    is_glob = jnp.asarray(layer_is_global(cfg))
+    policy = _REMAT_POLICIES.get(cfg.remat_policy, _REMAT_POLICIES['nothing'])
+    if cfg.remat_policy == 'none':
+        remat = False
+
+    def body(xc, xs):
+        pl, ig = xs
+        fn = layer_fwd
+        if remat:
+            fn = jax.checkpoint(layer_fwd, policy=policy(),
+                                static_argnums=(0, 5, 6))
+        x2, cache, aux = fn(cfg, pl, xc, positions, ig, q_chunk, want_cache)
+        return x2, (cache, aux)
+
+    x, (caches, auxes) = _scan(body, x, (params['layers'], is_glob))
+    return x, caches, auxes
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            q_chunk: int = 1024, want_cache: bool = False,
+            remat: bool = True):
+    """tokens: (B,S[,ncb]); prefix_embeds: optional (B,P,D) stub frontend."""
+    x = embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(ACT_DTYPE), x], axis=1)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    qc = q_chunk if (q_chunk and S % q_chunk == 0 and S > q_chunk) else 0
+    x, caches, auxes = _stack_scan(cfg, params, x, positions, qc,
+                                   want_cache, remat)
+    x = rmsnorm(x, params['final_norm'], cfg.norm_eps, cfg.fused_norm)
+    return x, caches, auxes
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: bool = True):
+    """batch: {'tokens': (B,S[,ncb]), optional 'prefix_embeds'}.
+    Next-token CE over real (unpadded) vocab + MoE aux losses."""
+    tokens = batch['tokens']
+    x, _, auxes = forward(params, cfg, tokens,
+                          batch.get('prefix_embeds'), remat=remat)
+    P = x.shape[1] - tokens.shape[1]           # prefix length (vlm)
+    x = x[:, P:]
+    logits = lm_logits(params, cfg, x)[:, :-1]           # (B,S-1,[ncb,]V)
+    labels = tokens[:, 1:]
+    # mask padded vocab entries out of the softmax
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e9, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -jnp.mean(ll)
+    metrics = {'ce': loss}
+    if cfg.moe is not None:
+        lb = jnp.mean(auxes['lb'])
+        zl = jnp.mean(auxes['zl'])
+        loss = loss + cfg.moe.aux_coef * lb + cfg.moe.router_z_coef * zl
+        metrics.update(lb=lb, zl=zl)
+    return loss, metrics
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            q_chunk: int = 1024):
+    """Returns (last-position logits, decode cache)."""
+    x, caches, _ = forward(params, cfg, tokens, prefix_embeds,
+                           q_chunk=q_chunk, want_cache=True, remat=False)
+    logits = lm_logits(params, cfg, x[:, -1:])
+    B, S = x.shape[:2]
+    cache = dict(caches)
+    if cfg.seq_mixer != 'rwkv6':
+        C = cache['k'].shape[2]
+        pos = jnp.arange(S - C, S, dtype=jnp.int32)
+        cache['pos'] = jnp.broadcast_to(pos[None], (B, C))
+        # ring alignment: decode writes position p at slot p % C, so slot j
+        # must hold position (S - C + j) with (S - C + j) % C == slot —
+        # roll by S % C to restore the invariant when S wrapped the ring.
+        r = S % C
+        if r and S > C:
+            cache['k'] = jnp.roll(cache['k'], r, axis=2)
+            cache['v'] = jnp.roll(cache['v'], r, axis=2)
+            cache['pos'] = jnp.roll(cache['pos'], r, axis=1)
+    cache['next_pos'] = jnp.int32(S)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=ACT_DTYPE, abstract: bool = False):
+    """Decode-cache pytree (concrete zeros or ShapeDtypeStructs)."""
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    mk = (jax.ShapeDtypeStruct if abstract
+          else lambda s, d: jnp.zeros(s, d))
+    cache = {}
+    if cfg.seq_mixer == 'rwkv6':
+        RH = cfg.rwkv_heads
+        cache['wkv'] = mk((L, batch, RH, 64, 64), jnp.float32)
+        cache['shift_tm'] = mk((L, batch, cfg.d_model), dtype)
+        cache['shift_cm'] = mk((L, batch, cfg.d_model), dtype)
+    else:
+        C = cfg.decode_cache_len(cache_len)
+        cache['k'] = mk((L, batch, C, Hkv, hd), dtype)
+        cache['v'] = mk((L, batch, C, Hkv, hd), dtype)
+        cache['pos'] = mk((batch, C), jnp.int32)
+        if cfg.seq_mixer == 'hybrid':
+            cache['ssm'] = mk((L, batch, cfg.padded_heads, cfg.ssm_state,
+                               hd), jnp.float32)
+    cache['next_pos'] = mk((), jnp.int32)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """tokens: (B,1[,ncb]).  Returns (logits (B,1,[ncb,]V), new cache)."""
+    x = embed_tokens(params, cfg, tokens)
+    pos = cache['next_pos']
+    if cfg.seq_mixer == 'rwkv6':
+        def body(xc, xs):
+            pl, cl = xs
+            x2, nc = layer_decode(cfg, pl, xc, pos, cl, 0)
+            return x2, nc
+        x, new_lc = _scan(body, x, (params['layers'],
+                                           {k: cache[k] for k in
+                                            ('wkv', 'shift_tm', 'shift_cm')}))
+        new_cache = dict(new_lc)
+    else:
+        C = cache['k'].shape[2]
+        slot = (pos % C).astype(jnp.int32)
+        lc_keys = ['k', 'v'] + (['ssm'] if cfg.seq_mixer == 'hybrid' else [])
+        pos_arr = jax.lax.dynamic_update_slice(
+            cache['pos'], jnp.full((cache['pos'].shape[0], 1), pos,
+                                   jnp.int32), (0, slot))
+        # in long-SWA mode the cache is window-sized: every layer windowed
+        exact_hybrid = C > cfg.window > 0
+        is_glob = (jnp.asarray(layer_is_global(cfg)) if exact_hybrid
+                   else jnp.zeros((cfg.n_layers,), bool))
+
+        def body(xc, xs):
+            pl, cl, ig = xs
+            cl = dict(cl, pos=pos_arr)
+            x2, nc = layer_decode(cfg, pl, xc, pos, cl, slot, ig)
+            return x2, {k: nc[k] for k in lc_keys}
+
+        x, new_lc = _scan(body, x,
+                                 (params['layers'],
+                                  {k: cache[k] for k in lc_keys}, is_glob))
+        new_cache = dict(new_lc)
+        new_cache['pos'] = pos_arr
+    x = rmsnorm(x, params['final_norm'], cfg.norm_eps, cfg.fused_norm)
+    logits = lm_logits(params, cfg, x)
+    new_cache['next_pos'] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,34 @@
+"""Fault-tolerant block runtime (paper §V).
+
+The paper's deployment model, reimplemented host-side around jit'd JAX
+samplers:
+
+    manager -- data server (database) -- binary tree of forwarders -- workers
+
+* every worker propagates its own walker population; *zero* communication
+  during a block;
+* a block's average is an i.i.d. Gaussian sample => any block can be dropped
+  (worker death), truncated (stop signal), or added (elastic worker join)
+  without biasing the final average;
+* results are keyed by a CRC-32 of the *critical data* so different runs can
+  never corrupt each other, and merging databases (grid computing) is a
+  plain union;
+* the database (sqlite) IS the checkpoint: restart = read the walker
+  reservoir + keep appending blocks.
+
+On a real 1000-node TPU fleet each host runs one worker process per local
+device group; the forwarder tree spans hosts over TCP exactly as in the
+paper.  Here workers are threads (the samplers release the GIL inside XLA)
+and the tree is in-process queues — the protocol, fault paths, and unbiased-
+ness contract are what the tests exercise.
+"""
+from repro.runtime.blocks import BlockResult, combine_blocks
+from repro.runtime.database import ResultDatabase, critical_data_key
+from repro.runtime.forwarder import Forwarder, build_tree
+from repro.runtime.manager import QMCManager, RunConfig
+from repro.runtime.reservoir import WalkerReservoir
+
+__all__ = [
+    'BlockResult', 'combine_blocks', 'ResultDatabase', 'critical_data_key',
+    'Forwarder', 'build_tree', 'QMCManager', 'RunConfig', 'WalkerReservoir',
+]

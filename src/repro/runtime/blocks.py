@@ -1,0 +1,72 @@
+"""Block results: the unit of fault tolerance (paper §V.A).
+
+A block is the average of `steps` Monte Carlo generations over one worker's
+private walker population.  Block averages are i.i.d. Gaussian samples of the
+same estimator, so the *combination rule is a weighted mean* and any subset
+of blocks is an unbiased estimate — dropping a dead worker's in-flight block
+or truncating a block at a stop signal introduces no bias (the paper's
+central fault-tolerance argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockResult:
+    """One block's sufficient statistics."""
+
+    run_key: str            # CRC-32 hex of the critical data
+    worker_id: int
+    block_id: int           # per-worker counter (unique with worker_id)
+    weight: float           # total statistical weight (walker-steps or Pi_t)
+    e_mean: float           # weighted mean of E_L over the block
+    e2_mean: float          # weighted mean of E_L^2 (for error bars)
+    aux: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    timestamp: float = dataclasses.field(default_factory=time.time)
+    job: str = ''           # unique job identity: (job, worker, block) is
+                            # the dedupe key across clusters/restarts
+
+    def is_valid(self) -> bool:
+        return (self.weight > 0.0 and math.isfinite(self.e_mean)
+                and math.isfinite(self.e2_mean))
+
+
+@dataclasses.dataclass(frozen=True)
+class RunningAverage:
+    n_blocks: int
+    weight: float
+    energy: float
+    variance: float         # population variance of E_L
+    error: float            # standard error of the block mean
+
+    def __str__(self) -> str:
+        return (f'E = {self.energy:+.6f} +/- {self.error:.6f} '
+                f'({self.n_blocks} blocks, weight {self.weight:.3g})')
+
+
+def combine_blocks(blocks: list[BlockResult]) -> RunningAverage:
+    """Weighted mean over blocks + block-level standard error.
+
+    The error bar uses the spread of *block means* (blocks are i.i.d. by
+    construction), not the raw E_L variance — matching the paper's
+    post-processing-by-database-query model.
+    """
+    blocks = [b for b in blocks if b.is_valid()]
+    if not blocks:
+        return RunningAverage(0, 0.0, float('nan'), float('nan'),
+                              float('inf'))
+    wsum = sum(b.weight for b in blocks)
+    e = sum(b.weight * b.e_mean for b in blocks) / wsum
+    e2 = sum(b.weight * b.e2_mean for b in blocks) / wsum
+    var = max(e2 - e * e, 0.0)
+    if len(blocks) > 1:
+        # weighted variance of block means around the global mean
+        num = sum(b.weight * (b.e_mean - e) ** 2 for b in blocks)
+        err = math.sqrt(num / wsum / (len(blocks) - 1))
+    else:
+        err = float('inf')
+    return RunningAverage(len(blocks), wsum, e, var, err)

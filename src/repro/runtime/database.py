@@ -1,0 +1,133 @@
+"""CRC-keyed sqlite result database (paper §V.B/§V.C).
+
+The database replaces input/output files: it stores every *block average*
+(never running averages — those are recomputed on demand by queries), the
+walker reservoir for restarts, and is keyed by a CRC-32 of the run's
+critical data so results from different simulations can never mix.
+
+Properties inherited from this design (paper's list):
+  * checkpoint/restart is always available (the DB is the checkpoint);
+  * post-hoc analysis (correlations, re-weighting) on stored blocks;
+  * merging grid results  = merging databases (`merge_from`);
+  * many independent jobs may write to the same database concurrently
+    (sqlite WAL mode) to gather elastic resources.
+"""
+from __future__ import annotations
+
+import io
+import json
+import sqlite3
+import threading
+import zlib
+from typing import Iterable
+
+import numpy as np
+
+from repro.runtime.blocks import BlockResult, RunningAverage, combine_blocks
+
+
+def critical_data_key(**critical) -> str:
+    """CRC-32 hex over the run's critical data (paper §V.C).
+
+    Critical data = anything that changes the *estimator* (geometry, MOs,
+    Jastrow parameters, time step...).  Walker counts / block lengths are
+    explicitly NOT critical (results remain combinable across them).
+    """
+    crc = 0
+    for name in sorted(critical):
+        v = critical[name]
+        crc = zlib.crc32(name.encode(), crc)
+        if isinstance(v, np.ndarray):
+            crc = zlib.crc32(np.ascontiguousarray(v).tobytes(), crc)
+        else:
+            crc = zlib.crc32(json.dumps(v, sort_keys=True,
+                                        default=float).encode(), crc)
+    return f'{crc & 0xffffffff:08x}'
+
+
+class ResultDatabase:
+    """Thread-safe sqlite store for blocks + walker reservoirs."""
+
+    def __init__(self, path: str = ':memory:'):
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        self._lock = threading.Lock()
+        with self._lock:
+            self._conn.execute('PRAGMA journal_mode=WAL')
+            self._conn.execute('''CREATE TABLE IF NOT EXISTS blocks (
+                run_key TEXT NOT NULL, job TEXT NOT NULL,
+                worker_id INTEGER, block_id INTEGER,
+                weight REAL, e_mean REAL, e2_mean REAL,
+                aux TEXT, timestamp REAL,
+                PRIMARY KEY (run_key, job, worker_id, block_id))''')
+            self._conn.execute('''CREATE TABLE IF NOT EXISTS reservoir (
+                run_key TEXT PRIMARY KEY, payload BLOB, timestamp REAL)''')
+            self._conn.commit()
+
+    # -- blocks -----------------------------------------------------------
+    def append(self, blocks: Iterable[BlockResult]) -> int:
+        rows = [(b.run_key, b.job, b.worker_id, b.block_id, b.weight,
+                 b.e_mean, b.e2_mean, json.dumps(dict(b.aux)), b.timestamp)
+                for b in blocks if b.is_valid()]
+        with self._lock:
+            cur = self._conn.executemany(
+                'INSERT OR IGNORE INTO blocks VALUES (?,?,?,?,?,?,?,?,?)',
+                rows)
+            self._conn.commit()
+        return cur.rowcount if cur.rowcount >= 0 else len(rows)
+
+    def blocks(self, run_key: str) -> list[BlockResult]:
+        with self._lock:
+            rows = self._conn.execute(
+                'SELECT run_key, job, worker_id, block_id, weight, e_mean, '
+                'e2_mean, aux, timestamp FROM blocks WHERE run_key=?',
+                (run_key,)).fetchall()
+        return [BlockResult(r[0], r[2], r[3], r[4], r[5], r[6],
+                            json.loads(r[7]), r[8], job=r[1]) for r in rows]
+
+    def running_average(self, run_key: str) -> RunningAverage:
+        """The paper's 'post-processed on demand by database queries'."""
+        return combine_blocks(self.blocks(run_key))
+
+    def n_blocks(self, run_key: str) -> int:
+        with self._lock:
+            (n,) = self._conn.execute(
+                'SELECT COUNT(*) FROM blocks WHERE run_key=?',
+                (run_key,)).fetchone()
+        return int(n)
+
+    # -- walker reservoir (checkpoint) -------------------------------------
+    def save_reservoir(self, run_key: str, walkers: np.ndarray,
+                       energies: np.ndarray) -> None:
+        buf = io.BytesIO()
+        np.savez_compressed(buf, walkers=walkers, energies=energies)
+        with self._lock:
+            self._conn.execute(
+                'INSERT OR REPLACE INTO reservoir VALUES (?, ?, '
+                "strftime('%s','now'))", (run_key, buf.getvalue()))
+            self._conn.commit()
+
+    def load_reservoir(self, run_key: str):
+        with self._lock:
+            row = self._conn.execute(
+                'SELECT payload FROM reservoir WHERE run_key=?',
+                (run_key,)).fetchone()
+        if row is None:
+            return None
+        data = np.load(io.BytesIO(row[0]))
+        return data['walkers'], data['energies']
+
+    # -- grid merging -------------------------------------------------------
+    def merge_from(self, other: 'ResultDatabase') -> int:
+        """Union of two databases (paper: combining clusters = merging DBs).
+        The (run_key, worker_id, block_id) primary key dedupes replays."""
+        added = 0
+        with other._lock:
+            keys = [k for (k,) in other._conn.execute(
+                'SELECT DISTINCT run_key FROM blocks').fetchall()]
+        for k in keys:
+            added += self.append(other.blocks(k))
+        return added
+
+    def close(self):
+        with self._lock:
+            self._conn.close()

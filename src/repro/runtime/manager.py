@@ -1,0 +1,162 @@
+"""Manager process (paper §V.D/fig. 3): orchestrates a fault-tolerant run.
+
+Responsibilities (paper-faithful):
+  * spawn the data server (root forwarder + database) and the forwarder tree;
+  * start workers with distinct seeds and reservoir-sampled initial walkers;
+  * periodically query the database, compute the running average, decide the
+    running/stopping state (wall-clock limit, error-bar target, block count);
+  * E_T feedback for DMC (between blocks — never inside one);
+  * elastic scaling: `add_worker` at any time; worker death is tolerated by
+    construction (its un-flushed block is simply absent from the database);
+  * termination: signal all workers, wait for the truncated-block flush to
+    drain through the tree, checkpoint the walker reservoir.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import uuid
+
+import numpy as np
+
+from repro.runtime.blocks import RunningAverage
+from repro.runtime.database import ResultDatabase
+from repro.runtime.forwarder import Forwarder, build_tree
+from repro.runtime.worker import Sampler, Worker
+
+
+@dataclasses.dataclass
+class RunConfig:
+    n_workers: int = 4
+    n_forwarders: int = 0            # 0 -> one per worker (+1 root)
+    target_error: float = 0.0        # stop when stderr below this (0: off)
+    max_blocks: int = 0              # stop after this many blocks (0: off)
+    wall_clock_limit: float = 0.0    # seconds (0: off)
+    poll_interval: float = 0.05
+    subblocks_per_block: int = 4
+    n_kept: int = 64                 # walker reservoir size
+    e_trial_feedback: bool = False   # DMC E_T update between polls
+    feedback_damping: float = 0.5
+    drain_timeout: float = 3.0
+
+
+class QMCManager:
+    def __init__(self, sampler: Sampler, run_key: str, cfg: RunConfig,
+                 db: ResultDatabase | None = None, seed: int = 0):
+        self.sampler = sampler
+        self.run_key = run_key
+        self.cfg = cfg
+        self.db = db or ResultDatabase()
+        n_fwd = cfg.n_forwarders or (cfg.n_workers + 1)
+        self.tree: list[Forwarder] = build_tree(n_fwd, self.db,
+                                                n_kept=cfg.n_kept)
+        self.workers: list[Worker] = []
+        self._seed = seed
+        self._next_worker_id = 0
+        self._t0 = time.monotonic()
+        # unique job identity: lets independent clusters / restarted runs
+        # write the same (worker, block) counters without key collisions,
+        # while true replays (merging the same DB twice) still dedupe.
+        self.job_id = uuid.uuid4().hex[:12]
+
+    # -- elastic resources ----------------------------------------------------
+    def add_worker(self, init_walkers: np.ndarray | None = None) -> Worker:
+        """Join a new computational resource to the running calculation."""
+        wid = self._next_worker_id
+        self._next_worker_id += 1
+        fwd = self.tree[1 + wid % (len(self.tree) - 1)] \
+            if len(self.tree) > 1 else self.tree[0]
+        if init_walkers is None:
+            res = self.db.load_reservoir(self.run_key)
+            if res is not None:
+                rng = np.random.default_rng(self._seed + 7777 + wid)
+                r = self.tree[0].reservoir
+                if len(r) == 0:
+                    r.add(res[0], res[1])
+                init_walkers = r.sample(16, rng)
+        w = Worker(wid, self.sampler, self.run_key, fwd,
+                   seed=self._seed + 1000 * (wid + 1),
+                   subblocks_per_block=self.cfg.subblocks_per_block,
+                   init_walkers=init_walkers, job=self.job_id)
+        self.workers.append(w)
+        w.start()
+        return w
+
+    def remove_worker(self, worker: Worker, graceful: bool = True) -> None:
+        """Best-effort-mode preemption (graceful) or failure (not)."""
+        if graceful:
+            worker.stop()
+        else:
+            worker.crash()
+
+    # -- run loop ---------------------------------------------------------
+    def start(self) -> None:
+        for _ in range(self.cfg.n_workers):
+            self.add_worker()
+
+    def should_stop(self, avg: RunningAverage) -> bool:
+        c = self.cfg
+        if c.wall_clock_limit and (time.monotonic() - self._t0
+                                   > c.wall_clock_limit):
+            return True
+        if c.max_blocks and avg.n_blocks >= c.max_blocks:
+            return True
+        if c.target_error and avg.n_blocks >= 8 and avg.error < c.target_error:
+            return True
+        return False
+
+    def poll(self) -> RunningAverage:
+        avg = self.db.running_average(self.run_key)
+        if (self.cfg.e_trial_feedback and avg.n_blocks > 0
+                and np.isfinite(avg.energy)):
+            for w in self.workers:
+                if w.running:
+                    w.e_trial_update = avg.energy
+        return avg
+
+    def run(self) -> RunningAverage:
+        """Blocking run to completion. Returns the final running average."""
+        if not self.workers:
+            self.start()
+        while True:
+            time.sleep(self.cfg.poll_interval)
+            avg = self.poll()
+            if self.should_stop(avg):
+                break
+            if all(not w.running for w in self.workers):
+                break                              # everything died/finished
+        return self.shutdown()
+
+    def shutdown(self) -> RunningAverage:
+        """Paper's termination walk: signal workers -> flush -> drain tree."""
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join()
+        deadline = time.monotonic() + self.cfg.drain_timeout
+        # drain: wait until the root has absorbed in-flight packets
+        last = -1
+        while time.monotonic() < deadline:
+            n = self.db.n_blocks(self.run_key)
+            if n == last:
+                break
+            last = n
+            time.sleep(0.1)
+        # stop leaves first so final walker/block pushes drain through
+        # still-live ancestors; the root (data server) goes down last.
+        for f in reversed(self.tree[1:]):
+            f.stop()
+        time.sleep(0.1)                            # let the root drain
+        self.tree[0].stop()
+        # checkpoint the stratified walker reservoir
+        w, e = self.tree[0].reservoir.state()
+        if w is not None:
+            self.db.save_reservoir(self.run_key, w, e)
+        return self.db.running_average(self.run_key)
+
+    # -- fault injection (tests / chaos drills) -----------------------------
+    def kill_forwarder(self, idx: int) -> None:
+        self.tree[idx].kill()
+
+    def worker_errors(self) -> list[str]:
+        return [w.error for w in self.workers if w.error]

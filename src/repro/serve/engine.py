@@ -1,0 +1,137 @@
+"""Serving: jit'd prefill/decode programs + a batched request engine.
+
+Mirrors the paper's worker design: each decode replica owns its private
+batch (the walker population analogue) and never synchronizes with other
+replicas inside a step; requests are dispatched to replicas and results
+stream back through the (host-side) runtime.  `make_*` build the sharded
+programs the dry-run lowers for every decode/prefill cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import decode_step, init_cache, prefill
+from repro.sharding.partition import (batch_pspec, cache_pspecs,
+                                      named_sharding_tree)
+
+
+def make_prefill(cfg: ModelConfig, mesh: Mesh, q_chunk: int = 1024):
+    param_sh = named_sharding_tree(cfg, mesh)
+    tok_ndim = 3 if cfg.n_codebooks else 2
+    tok_sh = NamedSharding(mesh, batch_pspec(mesh, tok_ndim))
+
+    def fn(params, tokens, prefix_embeds=None):
+        return prefill(params, cfg, tokens, prefix_embeds, q_chunk=q_chunk)
+
+    in_sh = (param_sh, tok_sh)
+    if cfg.n_prefix_tokens:
+        in_sh = in_sh + (NamedSharding(mesh, batch_pspec(mesh, 3)),)
+    return jax.jit(fn, in_shardings=in_sh)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh, batch: int,
+                     cache_len: int):
+    """jit'd single-token decode with explicit cache shardings."""
+    param_sh = named_sharding_tree(cfg, mesh)
+    cache_ab = init_cache(cfg, batch, cache_len, abstract=True)
+    cache_sh = jax.tree.map(lambda p: NamedSharding(mesh, p),
+                            cache_pspecs(cfg, mesh, cache_ab))
+    tok_ndim = 3 if cfg.n_codebooks else 2
+    tok_sh = NamedSharding(mesh, batch_pspec(mesh, tok_ndim))
+
+    def fn(params, tokens, cache):
+        return decode_step(params, cfg, tokens, cache)
+
+    return jax.jit(fn, in_shardings=(param_sh, tok_sh, cache_sh),
+                   out_shardings=(None, cache_sh),
+                   donate_argnums=(2,)), cache_ab
+
+
+def grow_cache(cfg: ModelConfig, cache, max_len: int):
+    """Pad a prefill cache out to max_len slots (pos = -1 marks empty)."""
+    if cfg.seq_mixer == 'rwkv6':
+        return cache                          # state is O(1) already
+    C_tgt = cfg.decode_cache_len(max_len)
+    C = cache['k'].shape[2]
+    if C >= C_tgt:
+        return cache
+    pad = C_tgt - C
+    out = dict(cache)
+    out['k'] = jnp.pad(cache['k'], ((0, 0), (0, 0), (0, pad), (0, 0),
+                                    (0, 0)))
+    out['v'] = jnp.pad(cache['v'], ((0, 0), (0, 0), (0, pad), (0, 0),
+                                    (0, 0)))
+    out['pos'] = jnp.pad(cache['pos'], ((0, 0), (0, pad)),
+                         constant_values=-1)
+    return out
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32 — engine batches equal lengths
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Batched lockstep serving (CPU-runnable example).
+
+    Admits up to `batch` equal-length requests at once, prefills them with
+    the *batched prefill program*, then decodes in lockstep (greedy).
+    Early-finished slots idle until the wave completes — the per-replica
+    zero-sync design; replica-level elasticity lives in the runtime layer.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, batch: int = 4,
+                 max_len: int = 256):
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch, max_len
+        self.queue: list[Request] = []
+        self._prefill = jax.jit(
+            lambda p, t: prefill(p, cfg, t, q_chunk=0))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _next_wave(self) -> list[Request]:
+        wave = self.queue[:self.batch]
+        self.queue = self.queue[self.batch:]
+        return wave
+
+    def run(self) -> list[Request]:
+        done = []
+        while self.queue:
+            wave = self._next_wave()
+            S = len(wave[0].prompt)
+            assert all(len(r.prompt) == S for r in wave), \
+                'engine batches equal-length prompts'
+            toks = np.zeros((self.batch, S), np.int32)
+            for b, r in enumerate(wave):
+                toks[b] = r.prompt
+            logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            cache = grow_cache(self.cfg, cache, S + max(r.max_new
+                                                        for r in wave))
+            last = np.asarray(logits)[:, -1]
+            for _ in range(max(r.max_new for r in wave)):
+                nxt = last.argmax(-1).astype(np.int32)
+                for b, r in enumerate(wave):
+                    if len(r.out) < r.max_new:
+                        r.out.append(int(nxt[b]))
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(nxt[:, None]), cache)
+                last = np.asarray(logits)[:, -1]
+            for r in wave:
+                r.done = True
+                done.append(r)
+        return done

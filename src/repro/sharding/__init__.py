@@ -1,0 +1,5 @@
+from repro.sharding.partition import (LOGICAL_RULES, named_sharding_tree,
+                                      opt_state_specs, partition_spec_tree)
+
+__all__ = ['LOGICAL_RULES', 'named_sharding_tree', 'opt_state_specs',
+           'partition_spec_tree']

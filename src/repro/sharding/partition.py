@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis partitioning rules.
+
+Parameters declare *logical* axes (params.py); this module maps them onto
+the production mesh:
+
+    batch   -> ('pod', 'data')   [data parallel, hierarchical across pods]
+    heads / mlp / vocab / experts -> 'model'   [tensor / expert parallel]
+    kv_heads -> 'model' only when divisible (config.kv_sharded)
+    embed / layers / everything else -> replicated
+
+ZeRO-1: optimizer-state tensors additionally shard their largest replicated
+dim over ('data',) when divisible — the paper-orthogonal memory trick that
+makes 30B-param training fit (`opt_state_specs`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, param_specs, tree_map_specs
+
+LOGICAL_RULES = {
+    'batch': ('pod', 'data'),
+    'seq': None,
+    'embed': None,
+    'layers': None,
+    'heads': 'model',
+    'kv_heads': 'model',        # applied only when cfg.kv_sharded
+    'mlp': 'model',
+    'vocab': 'model',
+    'experts': 'model',
+}
+
+
+def _mesh_axes(mesh: Mesh, logical: Optional[str], cfg: ModelConfig):
+    if logical is None:
+        return None
+    if logical == 'kv_heads' and not cfg.kv_sharded:
+        return None
+    rule = LOGICAL_RULES.get(logical)
+    if rule is None:
+        return None
+    if isinstance(rule, tuple):
+        axes = tuple(a for a in rule if a in mesh.axis_names)
+        return axes if axes else None
+    return rule if rule in mesh.axis_names else None
+
+
+def spec_to_pspec(s: ParamSpec, mesh: Mesh, cfg: ModelConfig) -> P:
+    return P(*(_mesh_axes(mesh, ax, cfg) for ax in s.axes))
+
+
+def partition_spec_tree(cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec tree matching param_specs(cfg)."""
+    return tree_map_specs(lambda s: spec_to_pspec(s, mesh, cfg),
+                          param_specs(cfg))
+
+
+def named_sharding_tree(cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        partition_spec_tree(cfg, mesh))
+
+
+def batch_pspec(mesh: Mesh, ndim: int = 2, batch_size: int = 0) -> P:
+    """Input batch: leading dim over (pod, data); rest replicated.
+
+    batch_size > 0 enables the divisibility guard (long_500k decodes run
+    at global batch 1: replicate instead of sharding)."""
+    axes = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+    if batch_size:
+        dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if dp and batch_size % dp:
+            axes = ()
+    return P(axes if axes else None, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_tree):
+    """Decode-cache sharding: batch dim over (pod,data) where divisible,
+    kv-heads over model when sharded; SSM/RWKV states batch-sharded."""
+    dp = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(path_leaf):
+        path, leaf = path_leaf
+        name = path[-1] if path else ''
+        shape = leaf.shape
+        if name == 'next_pos':
+            return P()
+        # batch axis index: first dim for 'pos', second for (L, B, ...)
+        b_ax = 0 if name == 'pos' else 1
+        if len(shape) <= b_ax or shape[b_ax] % max(dp_size, 1):
+            dpa = None
+        else:
+            dpa = dp
+        spec = [None] * len(shape)
+        if dpa:
+            spec[b_ax] = dpa
+        if name in ('k', 'v') and cfg.kv_sharded:
+            spec[3] = 'model'
+        if name in ('wkv', 'ssm'):
+            spec[2] = 'model'     # heads axis (padded to model multiple)
+        return P(*spec)
+
+    paths = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    flat = [one(((tuple(str(getattr(k, 'key', k)) for k in path)), leaf))
+            for path, leaf in paths]
+    treedef = jax.tree.structure(cache_tree)
+    return jax.tree.unflatten(treedef, flat)
+
+
+def opt_state_specs(param_pspecs, abstract_params, mesh: Mesh):
+    """ZeRO-1: shard each Adam-moment tensor over 'data' on its first
+    dimension that is (a) not already sharded and (b) divisible.
+
+    Parameters themselves stay with their TP sharding (gathered weights);
+    only the optimizer moments (2x params memory, f32) get the extra
+    data-axis sharding — update-time all-gathers are overlapped by XLA."""
+    if 'data' not in mesh.axis_names:
+        return param_pspecs
+    dsize = mesh.shape['data']
+
+    def one(pspec: P, aval):
+        spec = list(pspec) + [None] * (len(aval.shape) - len(pspec))
+        for i, (ax, dim) in enumerate(zip(spec, aval.shape)):
+            if ax is None and dim % dsize == 0 and dim >= dsize:
+                spec[i] = 'data'
+                return P(*spec)
+        return pspec
+
+    return jax.tree.map(one, param_pspecs, abstract_params)

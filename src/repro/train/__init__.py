@@ -1,0 +1,5 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.step import make_train_step, train_step
+
+__all__ = ['AdamWState', 'adamw_init', 'adamw_update', 'make_train_step',
+           'train_step']

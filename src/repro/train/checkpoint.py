@@ -1,0 +1,74 @@
+"""Checkpointing for the LM trainer: atomic npz snapshots of pytrees.
+
+Complements the QMC runtime's database-is-the-checkpoint design: the LM
+trainer is synchronous, so fault tolerance = periodic atomic snapshots +
+restart (plus the CRC run-key guard shared with the QMC side).  Writes are
+atomic (tmp + rename) so a mid-write crash never corrupts the latest good
+checkpoint; `latest_step` scans the directory on restart.
+"""
+from __future__ import annotations
+
+import os
+import re
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree,
+                    run_key: str = '') -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    flat['__step__'] = np.asarray(step)
+    flat['__run_key__'] = np.frombuffer(
+        run_key.encode() or b'\0', dtype=np.uint8)
+    tmp = ckpt_dir / f'.tmp_step_{step:08d}.npz'
+    final = ckpt_dir / f'step_{step:08d}.npz'
+    np.savez_compressed(tmp, **flat)
+    os.replace(tmp, final)                     # atomic
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(m.group(1)) for f in ckpt_dir.iterdir()
+             if (m := re.match(r'step_(\d+)\.npz$', f.name))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | Path, tree_like, step: int = -1,
+                       run_key: str = ''):
+    """Restore into the structure of `tree_like`. Returns (tree, step)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step < 0:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f'no checkpoints in {ckpt_dir}')
+    data = np.load(ckpt_dir / f'step_{step:08d}.npz')
+    if run_key:
+        stored = bytes(data['__run_key__']).rstrip(b'\0').decode()
+        if stored and stored != run_key:
+            raise ValueError(f'checkpoint run_key {stored!r} != {run_key!r}'
+                             ' — refusing to mix simulations (paper §V.C)')
+    paths = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in paths[0]:
+        key = '/'.join(str(getattr(p, 'key', getattr(p, 'idx', p)))
+                       for p in path)
+        arr = data[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, 'dtype')
+                      else arr)
+    return jax.tree_util.tree_unflatten(paths[1], leaves), int(step)

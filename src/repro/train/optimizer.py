@@ -1,0 +1,61 @@
+"""AdamW in plain JAX (f32 moments, decoupled weight decay).
+
+Kept dependency-free so the ZeRO-1 sharding of the moment tensors is fully
+controlled by `sharding.partition.opt_state_specs` (no optax pytree
+surprises in pjit sharding trees).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray        # () int32
+    mu: dict                 # first moments (params tree, f32)
+    nu: dict                 # second moments
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros)
+                      if isinstance(zeros, dict) else zeros)
+
+
+def adamw_abstract(abstract_params) -> AdamWState:
+    """ShapeDtypeStruct version for the dry-run."""
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                     abstract_params)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=z, nu=z)
+
+
+def adamw_update(grads, state: AdamWState, params, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, grad_clip: float = 1.0):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        newp = p.astype(jnp.float32) - lr * (u + weight_decay
+                                             * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    newp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return newp, AdamWState(step=step, mu=mu, nu=nu), gnorm

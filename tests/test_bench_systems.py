@@ -1,0 +1,80 @@
+"""Procedural benchmark systems: size/sparsity structure (paper Table IV)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aos
+from repro.systems.bench import (build_bench_wavefunction, make_bench_system,
+                                 paper_system)
+
+
+def _sample_sparsity(sys, n_probe=None, seed=0):
+    rng = np.random.default_rng(seed)
+    n = n_probe or sys.mol.n_elec
+    at = rng.integers(0, sys.mol.coords.shape[0], n)
+    r = jnp.asarray(sys.mol.coords[at] + rng.normal(scale=1.2, size=(n, 3)),
+                    jnp.float32)
+    _, atom_active = aos.eval_ao_block(
+        sys.basis, jnp.asarray(sys.mol.coords, jnp.float32), r)
+    mask = atom_active[:, jnp.asarray(sys.basis.ao_atom)]
+    counts = np.asarray(jnp.sum(mask, axis=1))
+    return float(jnp.mean(mask)), counts
+
+
+def test_exact_electron_counts():
+    for name, n in [('smallest', 158), ('b-strand', 434),
+                    ('b-strand-tz', 434)]:
+        s = paper_system(name)
+        assert s.mol.n_elec == n
+        assert s.mol.n_up + s.mol.n_dn == n
+
+
+def test_basis_ratio_matches_paper_band():
+    """N_basis/N in the paper's 2.2-6.8 band, TZ ~3x the DZ count."""
+    dz = paper_system('b-strand')
+    tz = paper_system('b-strand-tz')
+    assert 2.0 < dz.basis.n_ao / dz.mol.n_elec < 2.6
+    assert 6.0 < tz.basis.n_ao / tz.mol.n_elec < 7.0
+
+
+def test_active_count_roughly_constant_in_N():
+    """Paper Table IV: non-zero AOs per electron ~constant across sizes."""
+    small = make_bench_system('s', 158, seed=1)
+    large = make_bench_system('l', 1056, seed=3)
+    _, c_small = _sample_sparsity(small, n_probe=80)
+    _, c_large = _sample_sparsity(large, n_probe=80)
+    # mean active count within 2.5x across a 6.7x size change
+    ratio = c_large.mean() / max(c_small.mean(), 1.0)
+    assert 0.4 < ratio < 2.5, (c_small.mean(), c_large.mean())
+
+
+def test_density_decreases_with_size():
+    d_small, _ = _sample_sparsity(paper_system('smallest'), n_probe=60)
+    d_large, _ = _sample_sparsity(paper_system('1ze7'), n_probe=60)
+    assert d_large < d_small * 0.5
+
+
+def test_mos_are_localized_but_not_sparse():
+    """A-matrix density should be in the paper's 'too dense to exploit'
+    regime (> 25%), justifying dense-A (paper §IV.B.2)."""
+    s = paper_system('1ze7')
+    assert s.a_density > 0.25
+    # and localized: coefficients decay with distance from the MO center
+    A = np.abs(s.mos)
+    assert (A > 0).mean() < 1.0
+
+
+def test_bench_wavefunction_evaluates():
+    """One psi_state on the smallest system: finite logdet and E_L."""
+    import jax
+    from repro.core.wavefunction import psi_state
+    s = make_bench_system('tiny', 60, seed=7)   # 2 residues: fast
+    cfg, params = build_bench_wavefunction(s, method='sparse', k_max=256)
+    rng = np.random.default_rng(0)
+    at = rng.integers(0, s.mol.coords.shape[0], s.mol.n_elec)
+    r = jnp.asarray(s.mol.coords[at] + rng.normal(scale=0.8,
+                                                  size=(s.mol.n_elec, 3)),
+                    jnp.float32)
+    st = psi_state(cfg, params, r)
+    assert np.isfinite(float(st.log_psi))
+    assert np.isfinite(float(st.e_loc))

@@ -1,0 +1,85 @@
+"""§Perf optimization knobs preserve model semantics (within dtype noise)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.params import init_params, param_specs
+from repro.models.transformer import loss_fn
+
+
+def _batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return {'tokens': jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))}
+
+
+def test_mha_identity_same_loss():
+    """With kv padded alongside q (identity map), zero-padded kv heads
+    change nothing: same loss for the same real weights."""
+    cfg0 = get_config('stablelm-1.6b', smoke=True)
+    cfg1 = dataclasses.replace(cfg0, mha_identity=True, model_axis=2)
+    # model_axis=2 pads heads 4 -> 4 (already multiple); force padding:
+    cfg1 = dataclasses.replace(cfg1, n_heads=3, n_kv_heads=3)
+    cfg0 = dataclasses.replace(cfg0, n_heads=3, n_kv_heads=3)
+    p0 = init_params(jax.random.PRNGKey(0), cfg0)
+    p1 = init_params(jax.random.PRNGKey(0), cfg1)
+    # copy real weights from p0 into p1's padded tensors
+    lay0, lay1 = p0['layers']['attn'], p1['layers']['attn']
+    for k in ('wk', 'wv'):
+        arr = np.zeros(lay1[k].shape, np.float32)
+        arr[:, :, :3, :] = np.asarray(lay0[k])
+        lay1[k] = jnp.asarray(arr)
+    for k in ('wq', 'wo'):
+        lay1[k] = lay0[k] if lay1[k].shape == lay0[k].shape else lay1[k]
+    p1['layers']['attn'] = lay1
+    for k in ('ln1', 'ln2'):
+        p1['layers'][k] = p0['layers'][k]
+    p1['layers']['mlp'] = p0['layers']['mlp']
+    p1['embed'] = p0['embed']
+    p1['final_norm'] = p0['final_norm']
+    p1['lm_head'] = p0['lm_head']
+
+    batch = _batch(cfg0)
+    l0, _ = loss_fn(p0, cfg0, batch)
+    l1, _ = loss_fn(p1, cfg1, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=2e-2)
+
+
+def test_kv_specs_padded_under_identity():
+    cfg = dataclasses.replace(get_config('stablelm-1.6b'),
+                              mha_identity=True)
+    specs = param_specs(cfg)
+    wk = specs['layers']['attn']['wk']
+    assert wk.shape[2] == cfg.padded_heads
+    assert cfg.kv_sharded
+
+
+@pytest.mark.parametrize('arch', ['yi-6b', 'mixtral-8x7b'])
+def test_bf16_scores_close_to_f32(arch):
+    cfg32 = get_config(arch, smoke=True)
+    cfg16 = dataclasses.replace(cfg32, attn_scores_f32=False)
+    params = init_params(jax.random.PRNGKey(1), cfg32)
+    batch = _batch(cfg32, seed=1)
+    l32, _ = loss_fn(params, cfg32, batch)
+    l16, _ = loss_fn(params, cfg16, batch)
+    assert abs(float(l32) - float(l16)) < 0.05 * float(l32)
+
+
+@pytest.mark.parametrize('policy', ['nothing', 'dots', 'none'])
+def test_remat_policies_same_gradients(policy):
+    cfg = dataclasses.replace(get_config('yi-6b', smoke=True),
+                              remat_policy=policy)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    batch = _batch(cfg, seed=2)
+    g = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    cfg_ref = dataclasses.replace(cfg, remat_policy='nothing')
+    g_ref = jax.grad(lambda p: loss_fn(p, cfg_ref, batch)[0])(params)
+    a = jax.tree.leaves(g)[0]
+    b = jax.tree.leaves(g_ref)[0]
+    # bf16 recompute-order noise: tiny absolute, large relative on ~0 grads
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=2e-3)

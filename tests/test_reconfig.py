@@ -1,0 +1,65 @@
+"""Stochastic reconfiguration: property-based unbiasedness + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reconfig import global_weight_update, reconfigure
+
+
+@given(st.integers(min_value=2, max_value=64),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_population_size_constant(m, seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (m,)) + 1e-3
+    idx = reconfigure(key, w)
+    assert idx.shape == (m,)
+    assert bool(jnp.all((idx >= 0) & (idx < m)))
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_systematic_resampling_copy_counts(seed):
+    """Systematic resampling: copies_k in {floor(M p_k), ceil(M p_k)}."""
+    key = jax.random.PRNGKey(seed)
+    m = 32
+    w = jax.random.uniform(jax.random.fold_in(key, 7), (m,)) + 0.05
+    idx = np.asarray(reconfigure(key, w))
+    p = np.asarray(w) / np.sum(np.asarray(w))
+    counts = np.bincount(idx, minlength=m)
+    expected = m * p
+    assert np.all(counts >= np.floor(expected) - 1e-9)
+    assert np.all(counts <= np.ceil(expected) + 1e-9)
+
+
+def test_expected_copies_unbiased():
+    """E[copies_k] = M p_k across many independent reconfigurations."""
+    m, trials = 16, 4000
+    rng_w = np.random.default_rng(0)
+    w = jnp.asarray(rng_w.uniform(0.2, 2.0, m), jnp.float32)
+    p = np.asarray(w) / float(jnp.sum(w))
+
+    keys = jax.random.split(jax.random.PRNGKey(42), trials)
+    idx = jax.vmap(lambda k: reconfigure(k, w))(keys)   # (trials, m)
+    counts = np.apply_along_axis(
+        lambda a: np.bincount(a, minlength=m), 1, np.asarray(idx))
+    mean_copies = counts.mean(axis=0)
+    np.testing.assert_allclose(mean_copies, m * p, atol=0.05)
+
+
+def test_uniform_weights_identity_distribution():
+    """Equal weights: every walker is kept exactly once (comb aligns)."""
+    key = jax.random.PRNGKey(3)
+    w = jnp.ones((24,))
+    idx = np.asarray(reconfigure(key, w))
+    assert sorted(idx.tolist()) == list(range(24))
+
+
+def test_global_weight_window_product():
+    hist = jnp.zeros((4,))
+    vals = [1.1, 0.9, 1.05, 0.98, 1.02]
+    for v in vals:
+        hist, gw = global_weight_update(hist, jnp.float32(v))
+    expected = np.prod(vals[-4:])
+    np.testing.assert_allclose(float(gw), expected, rtol=1e-5)

@@ -1,0 +1,214 @@
+"""Fault-tolerant runtime: unbiasedness under faults, elasticity, restart."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import (QMCManager, ResultDatabase, RunConfig,
+                           WalkerReservoir, combine_blocks,
+                           critical_data_key)
+from repro.runtime.blocks import BlockResult
+from repro.runtime.forwarder import build_tree
+
+
+# ---------------------------------------------------------------------------
+# A deterministic fake sampler: Gaussian E_L around a known mean. Lets the
+# tests verify statistics exactly without QMC noise/compile time.
+# ---------------------------------------------------------------------------
+class FakeSampler:
+    def __init__(self, true_energy=-3.0, sigma=0.5, n_walkers=8,
+                 delay=0.0):
+        self.mu, self.sigma, self.n_walkers = true_energy, sigma, n_walkers
+        self.delay = delay
+
+    def init_state(self, worker_id, seed, walkers=None):
+        rng = np.random.default_rng(seed)
+        if walkers is not None:
+            return {'rng': rng, 'restarted': True}
+        return {'rng': rng, 'restarted': False}
+
+    def set_e_trial(self, state, e_trial):
+        state['e_trial'] = e_trial
+        return state
+
+    def run_subblock(self, state, seed):
+        if self.delay:
+            time.sleep(self.delay)
+        rng = state['rng']
+        e = rng.normal(self.mu, self.sigma, size=64)
+        stats = dict(weight=float(e.size), e_mean=float(e.mean()),
+                     e2_mean=float((e ** 2).mean()), aux={})
+        walkers = rng.normal(size=(self.n_walkers, 2, 3))
+        return state, stats, walkers, e[:self.n_walkers]
+
+
+def _run_manager(cfg, sampler=None, key='deadbeef', **mgr_kw):
+    mgr = QMCManager(sampler or FakeSampler(), key, cfg, **mgr_kw)
+    avg = mgr.run()
+    return mgr, avg
+
+
+# ---------------------------------------------------------------------------
+def test_basic_run_reaches_block_target():
+    cfg = RunConfig(n_workers=3, max_blocks=12, poll_interval=0.02)
+    mgr, avg = _run_manager(cfg)
+    assert avg.n_blocks >= 12
+    assert abs(avg.energy - (-3.0)) < 0.1
+    assert not mgr.worker_errors()
+
+
+def test_error_bar_stopping_condition():
+    cfg = RunConfig(n_workers=2, target_error=0.05, poll_interval=0.02)
+    _, avg = _run_manager(cfg)
+    assert avg.error < 0.05
+
+
+def test_worker_crash_does_not_bias_average():
+    """Hard-kill a worker mid-run: result stays unbiased, run completes."""
+    cfg = RunConfig(n_workers=4, max_blocks=24, poll_interval=0.02,
+                    subblocks_per_block=2)
+    sampler = FakeSampler(delay=0.002)
+    mgr = QMCManager(sampler, 'k1', cfg)
+    mgr.start()
+    time.sleep(0.1)
+    mgr.remove_worker(mgr.workers[0], graceful=False)   # crash, no flush
+    avg = mgr.run()
+    assert avg.n_blocks >= 24
+    assert abs(avg.energy - (-3.0)) < 0.15
+
+
+def test_forwarder_death_routes_around():
+    """Killing a mid-tree forwarder loses at most that node's in-flight
+    packet; children re-route to ancestors and the run completes."""
+    cfg = RunConfig(n_workers=4, n_forwarders=7, max_blocks=30,
+                    poll_interval=0.02)
+    sampler = FakeSampler(delay=0.002)
+    mgr = QMCManager(sampler, 'k2', cfg)
+    mgr.start()
+    time.sleep(0.15)
+    mgr.kill_forwarder(1)            # an internal node with children
+    avg = mgr.run()
+    assert avg.n_blocks >= 30
+    assert abs(avg.energy - (-3.0)) < 0.15
+
+
+def test_graceful_stop_flushes_truncated_block():
+    """SIGTERM analogue: stopping mid-block still contributes its steps."""
+    cfg = RunConfig(n_workers=1, subblocks_per_block=1000,  # huge block
+                    wall_clock_limit=0.5, poll_interval=0.05)
+    sampler = FakeSampler(delay=0.005)
+    mgr, avg = _run_manager(cfg, sampler, key='k3')
+    # without truncation the single block would never finish within 0.5 s
+    assert avg.n_blocks >= 1
+    assert avg.weight > 0
+
+
+def test_elastic_worker_join():
+    cfg = RunConfig(n_workers=1, max_blocks=20, poll_interval=0.02)
+    sampler = FakeSampler(delay=0.002)
+    mgr = QMCManager(sampler, 'k4', cfg)
+    mgr.start()
+    time.sleep(0.1)
+    for _ in range(3):
+        mgr.add_worker()             # resources arriving mid-run
+    avg = mgr.run()
+    workers_seen = {b.worker_id for b in mgr.db.blocks('k4')}
+    assert len(workers_seen) >= 2
+    assert avg.n_blocks >= 20
+
+
+def test_restart_from_reservoir():
+    """Second run on the same DB restarts workers from saved walkers."""
+    db = ResultDatabase()
+    cfg = RunConfig(n_workers=2, max_blocks=8, poll_interval=0.02)
+    sampler = FakeSampler()
+    mgr1 = QMCManager(sampler, 'k5', cfg, db=db)
+    avg1 = mgr1.run()
+    assert db.load_reservoir('k5') is not None
+
+    mgr2 = QMCManager(sampler, 'k5', cfg, db=db)
+    mgr2.start()
+    assert any(getattr(w, 'init_walkers', None) is not None
+               for w in mgr2.workers)
+    avg2 = mgr2.run()
+    assert avg2.n_blocks > avg1.n_blocks          # blocks accumulate
+
+
+def test_database_merge_grid_mode():
+    """Two clusters writing separate DBs merge into one unbiased result."""
+    dbs = [ResultDatabase(), ResultDatabase()]
+    for i, db in enumerate(dbs):
+        cfg = RunConfig(n_workers=2, max_blocks=6, poll_interval=0.02)
+        QMCManager(FakeSampler(), 'shared', cfg, db=db, seed=100 * i).run()
+    main = ResultDatabase()
+    n = main.merge_from(dbs[0]) + main.merge_from(dbs[1])
+    avg = main.running_average('shared')
+    assert avg.n_blocks == n
+    assert abs(avg.energy - (-3.0)) < 0.15
+    # merge is idempotent (primary key dedupe)
+    assert main.merge_from(dbs[0]) == 0
+
+
+def test_crc_key_separates_runs():
+    k1 = critical_data_key(coords=np.zeros((2, 3)), tau=0.01)
+    k2 = critical_data_key(coords=np.zeros((2, 3)), tau=0.02)
+    k3 = critical_data_key(coords=np.zeros((2, 3)), tau=0.01)
+    assert k1 != k2 and k1 == k3
+
+    db = ResultDatabase()
+    db.append([BlockResult(k1, 0, 0, 1.0, -1.0, 1.0)])
+    db.append([BlockResult(k2, 0, 0, 1.0, -9.0, 81.0)])
+    assert db.running_average(k1).energy == -1.0   # never mixed
+
+
+def test_combine_blocks_weighted():
+    blocks = [BlockResult('k', 0, 0, 1.0, -1.0, 1.0),
+              BlockResult('k', 0, 1, 3.0, -2.0, 4.0)]
+    avg = combine_blocks(blocks)
+    assert abs(avg.energy - (-1.75)) < 1e-12
+    assert avg.weight == 4.0
+
+
+def test_combine_blocks_rejects_invalid():
+    blocks = [BlockResult('k', 0, 0, 1.0, -1.0, 1.0),
+              BlockResult('k', 0, 1, 0.0, -99.0, 1.0),        # zero weight
+              BlockResult('k', 0, 2, 1.0, float('nan'), 1.0)]  # NaN
+    avg = combine_blocks(blocks)
+    assert avg.n_blocks == 1 and avg.energy == -1.0
+
+
+def test_reservoir_stratified_selection():
+    r = WalkerReservoir(16, np.random.default_rng(0))
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        w = rng.normal(size=(32, 2, 3))
+        e = rng.normal(size=32)
+        r.add(w, e)
+    assert len(r) == 16
+    _, energies = r.state()
+    # stratified: kept energies span the distribution, not one tail
+    assert energies.min() < -0.5 and energies.max() > 0.5
+    s = r.sample(8)
+    assert s.shape == (8, 2, 3)
+
+
+def test_qmc_end_to_end_through_runtime():
+    """Real DMC (H2) through the full manager/forwarder/db stack."""
+    import jax
+    from repro.core.jastrow import JastrowParams
+    import jax.numpy as jnp
+    from repro.runtime.samplers import DMCSampler
+    from repro.systems.molecule import build_wavefunction, h2
+
+    cfg_wf, params = build_wavefunction(*h2())
+    sampler = DMCSampler(cfg_wf, params, e_trial=-1.17, n_walkers=24,
+                         steps=30, tau=0.02, equil_steps=60)
+    key = critical_data_key(name='h2-dmc', tau=0.02,
+                            mo=np.asarray(params.mo))
+    cfg = RunConfig(n_workers=2, max_blocks=10, poll_interval=0.05,
+                    subblocks_per_block=2, e_trial_feedback=True)
+    mgr = QMCManager(sampler, key, cfg)
+    avg = mgr.run()
+    assert not mgr.worker_errors(), mgr.worker_errors()
+    assert avg.n_blocks >= 10
+    assert abs(avg.energy - (-1.174)) < 0.08, avg
