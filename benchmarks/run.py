@@ -1,34 +1,50 @@
-"""Benchmark harness: one benchmark per paper table (I-V).
+"""Benchmark harness: one benchmark per paper table (I-V) + repo extras.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--tables I,IV,V]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--tables I,IV,VI] \
+        [--json OUT.json]
 
-Prints one CSV-ish line per measurement.  --full runs the big systems
-(1ZE7/1AMB, minutes on CPU); default is the quick set.  TPU-side roofline
+Prints one CSV-ish line per measurement; ``--json`` additionally writes the
+rows as structured JSON (list of row objects + run metadata) so perf
+trajectories can accumulate in ``BENCH_*.json`` files.  --full runs the big
+systems (1ZE7/1AMB, minutes on CPU); default is the quick set.  Table VI is
+the ensemble-flattened vs per-walker-vmap comparison.  TPU-side roofline
 numbers live in experiments/roofline + EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_ROOT))
+sys.path.insert(0, str(_ROOT / 'src'))      # `repro` without PYTHONPATH=src
 
 from benchmarks import tables as T
 
 
-def main() -> int:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V')
-    args = ap.parse_args()
+    ap.add_argument('--tables', default='I,II,III,IV,V,VI')
+    ap.add_argument('--json', metavar='OUT.json', default=None,
+                    help='also write rows as structured JSON')
+    args = ap.parse_args(argv)
     quick = not args.full
     want = set(args.tables.upper().split(','))
 
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
-           'V': T.table5}
+           'V': T.table5, 'VI': T.table_ensemble}
+    unknown = want - set(fns)
+    if unknown:
+        print(f'# unknown tables ignored: {",".join(sorted(unknown))} '
+              f'(valid: {",".join(fns)})', flush=True)
     failures = 0
+    all_rows = []
+    timings = {}
     for tab, fn in fns.items():
         if tab not in want:
             continue
@@ -36,13 +52,33 @@ def main() -> int:
         t0 = time.time()
         try:
             rows = fn(quick=quick)
+            all_rows.extend(rows)
             for row in rows:
                 print(','.join(f'{k}={v}' for k, v in row.items()),
                       flush=True)
         except Exception as e:                      # pragma: no cover
             failures += 1
             print(f'table={tab},status=FAILED,error={e!r}', flush=True)
-        print(f'# table {tab} took {time.time() - t0:.1f}s', flush=True)
+        timings[tab] = round(time.time() - t0, 1)
+        print(f'# table {tab} took {timings[tab]}s', flush=True)
+
+    if args.json:
+        doc = {
+            'meta': {
+                'utc': time.strftime('%Y-%m-%dT%H:%M:%SZ', time.gmtime()),
+                'platform': platform.platform(),
+                'python': platform.python_version(),
+                'quick': quick,
+                'tables': sorted(want & set(fns)),
+                'table_seconds': timings,
+                'failures': failures,
+            },
+            'rows': all_rows,
+        }
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(doc, indent=2) + '\n')
+        print(f'# wrote {len(all_rows)} rows to {args.json}', flush=True)
     return 1 if failures else 0
 
 

@@ -228,3 +228,51 @@ def table5(quick=True):
                          speedup=round(rate / base, 2),
                          efficiency=round(rate / base / n, 3)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Table VI: ensemble-flattened vs per-walker-vmap psi evaluation
+# ---------------------------------------------------------------------------
+def table_ensemble(quick=True):
+    """Per-walker ``vmap(psi_state)`` vs the fused ``psi_state_batched``.
+
+    Table-III-style ratio rows, one per (method, W): same configuration,
+    same random walkers, both paths jitted, min-of-5 wall time.  The
+    ensemble path is the paper's load-amortization/cache-blocking idea
+    scaled to the walker population (DESIGN.md §4).
+    """
+    import dataclasses
+    from functools import partial
+
+    from repro.core.wavefunction import psi_state, psi_state_batched
+    from repro.systems.bench import build_bench_wavefunction, \
+        make_bench_system
+
+    s = make_bench_system('micro-peptide', n_elec=60, seed=5)
+    n_e = s.mol.n_elec
+    walker_counts = [16, 64] if quick else [16, 64, 256]
+    rng = np.random.default_rng(0)
+
+    rows = []
+    for method in ('dense', 'sparse', 'kernel'):
+        cfg, params = build_bench_wavefunction(s, method=method, k_max=160)
+        # per-walker tiles sized to one walker's 60 electrons; the ensemble
+        # path widens tile_e itself (ensemble_tile_e)
+        cfg = dataclasses.replace(cfg, kernel_tiles=(16, 32, 8))
+        for W in walker_counts:
+            if method == 'kernel' and W > 64:
+                continue                 # interpret-mode cost cap
+            at = rng.integers(0, s.mol.coords.shape[0], (W, n_e))
+            R = jnp.asarray(s.mol.coords[at]
+                            + rng.normal(scale=1.2, size=(W, n_e, 3)),
+                            jnp.float32)
+            f_vmap = jax.jit(
+                lambda p, RR, c=cfg: jax.vmap(partial(psi_state, c, p))(RR))
+            f_ens = jax.jit(lambda p, RR, c=cfg: psi_state_batched(c, p, RR))
+            t_v = _timeit(f_vmap, params, R, repeats=5)
+            t_e = _timeit(f_ens, params, R, repeats=5)
+            rows.append(dict(
+                table='VI', system=s.name, method=method, walkers=W,
+                n_elec=n_e, vmap_s=round(t_v, 4), ensemble_s=round(t_e, 4),
+                speedup=round(t_v / t_e, 2)))
+    return rows

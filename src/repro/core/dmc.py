@@ -13,6 +13,8 @@ Per generation (paper §II):
      (removes the finite-population bias, ref. [17]).
 
 The whole block is one jit'd lax.scan — zero host sync inside a block.
+Walker evaluation goes through ``vmc._evaluate``, i.e. the ensemble-flattened
+fused AO->MO->Slater pass by default (``cfg.ensemble_eval``).
 """
 from __future__ import annotations
 

@@ -26,20 +26,43 @@ def mo_products_dense(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
     return C.reshape(A.shape[0], n_e, five)
 
 
+def default_chunk(n_e: int, ensemble: bool = False) -> int:
+    """Electron-block size for ``mo_products_sparse``.
+
+    Single-walker calls always use 64 — the cache-blocking choice tuned on
+    the paper systems (including the large 1ZE7/1AMB walkers).  Big
+    ensemble-flattened batches use 256 so scan/dispatch overhead amortizes
+    while the gathered-A working set stays cache-sized — per-walker ``vmap``
+    instead multiplies the per-step gather by W, which is exactly the
+    blow-up the flattened path avoids.  Only the ensemble entry point flags
+    ``ensemble=True``; a large electron count alone does not reclassify a
+    walker.
+    """
+    return 256 if ensemble and n_e > 512 else 64
+
+
 def mo_products_sparse(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
-                       chunk: int = 64) -> jnp.ndarray:
+                       chunk: int = 0) -> jnp.ndarray:
     """Sparse product from packed B.
+
+    ``Bp``/``idx`` may cover one walker's electrons or a whole ensemble
+    flattened walker-major to ``n_e = W * n_elec`` rows — electrons are
+    independent columns of C, and the flattened form amortizes each gathered
+    A panel across the full population (paper's load amortization, scaled to
+    the ensemble).
 
     Args:
       A:   (n_orb, n_ao) dense MO coefficients (constant during the run).
       Bp:  (n_e, K, 5) packed active-AO values (zero padded).
       idx: (n_e, K) active AO indices (padding -> 0; Bp is 0 there).
       chunk: electron-block size bounding the gathered-A working set
-        (the paper's cache blocking over electrons).
+        (the paper's cache blocking over electrons); 0 -> ``default_chunk``.
 
     Returns C: (n_orb, n_e, 5).
     """
     n_e = Bp.shape[0]
+    if chunk <= 0:
+        chunk = default_chunk(n_e)
     pad = (-n_e) % chunk
     Bp_ = jnp.pad(Bp, ((0, pad), (0, 0), (0, 0)))
     idx_ = jnp.pad(idx, ((0, pad), (0, 0)))

@@ -44,6 +44,23 @@ def _spin_block(C_blk: jnp.ndarray, ns_steps: int):
     return sign, logdet, grad, lap, M
 
 
+def _spin_block_batched(C_blk: jnp.ndarray, ns_steps: int):
+    """Ensemble variant of ``_spin_block``: one batched LAPACK/Newton–Schulz
+    pass over the whole walker population instead of W tiny factorizations.
+
+    C_blk: (W, n, n, 5) — (walker, orbital, electron, component).
+    Returns sign (W,), logdet (W,), grad (W, n, 3), lap (W, n), M (W, n, n).
+
+    Implemented as vmap of ``_spin_block``: slogdet/inv/matmul lower to the
+    identical batched LAPACK/GEMM primitives, and the Slater math keeps a
+    single source of truth.  Note the production ensemble path
+    (``wavefunction.psi_state_batched``) gets the same batched lowering by
+    vmapping its whole per-walker tail — this function is the standalone
+    batched API, not a hook in that pipeline.
+    """
+    return jax.vmap(lambda C: _spin_block(C, ns_steps))(C_blk)
+
+
 def slater_state(C: jnp.ndarray, n_up: int, ns_steps: int = 1) -> SlaterState:
     """Assemble both spin determinants. C: (n_orb_tot, n_elec, 5)."""
     n_elec = C.shape[1]

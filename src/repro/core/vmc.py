@@ -12,7 +12,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .wavefunction import WavefunctionConfig, WavefunctionParams, psi_state
+from .wavefunction import (WavefunctionConfig, WavefunctionParams, psi_state,
+                           psi_state_batched)
 
 
 class WalkerEnsemble(NamedTuple):
@@ -35,7 +36,16 @@ class BlockStats(NamedTuple):
 
 
 def _evaluate(cfg, params, r):
-    st = jax.vmap(partial(psi_state, cfg, params))(r)
+    """Evaluate a walker batch r: (W, n_e, 3).
+
+    Default path is the ensemble-flattened fused AO->MO->Slater pass
+    (``psi_state_batched``); ``cfg.ensemble_eval=False`` falls back to the
+    per-walker vmap.  DMC shares this entry point.
+    """
+    if cfg.ensemble_eval:
+        st = psi_state_batched(cfg, params, r)
+    else:
+        st = jax.vmap(partial(psi_state, cfg, params))(r)
     return WalkerEnsemble(r=r, log_psi=st.log_psi, sign=st.sign,
                           drift=st.drift, e_loc=st.e_loc), st
 

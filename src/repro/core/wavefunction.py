@@ -35,6 +35,13 @@ class WavefunctionConfig:
     method: str = 'sparse'         # 'dense' | 'sparse' | 'kernel'
     ns_steps: int = 1              # Newton–Schulz refinement of the inverse
     kernel_tiles: tuple = (8, 8, 8)  # (tile_o, tile_k, tile_e); 128s on TPU
+    ensemble_eval: bool = True     # VMC/DMC walker batches: one flattened
+    #                                AO->MO->Slater pass instead of per-walker
+    #                                vmap (DESIGN.md §4)
+    kernel_ensemble_tile_cap: int = 0  # tile_e cap for ensemble kernel
+    #                                calls; 0 -> auto per backend (128 on
+    #                                TPU, 2048 on CPU/interpret — see
+    #                                kernels.sparse_mo.ops.ensemble_tiles)
 
     @property
     def n_elec(self) -> int:
@@ -62,7 +69,13 @@ class PsiState(NamedTuple):
 
 def _mo_tensor(cfg: WavefunctionConfig, params: WavefunctionParams,
                r_elec: jnp.ndarray):
-    """Compute C: (n_rows, n_e, 5) by the selected method + sparsity stats."""
+    """Compute C: (n_rows, N, 5) by the selected method + sparsity stats.
+
+    ``r_elec`` may be one walker's electrons (N = n_e) or an ensemble
+    flattened walker-major (N = W * n_e) — every method treats electrons as
+    independent columns.  The walker-shaped fast path used by
+    ``psi_state_batched`` is ``_mo_tensor_ensemble``.
+    """
     B, atom_active = aos.eval_ao_block(cfg.basis, params.coords, r_elec)
     ao_mask = atom_active[:, jnp.asarray(cfg.basis.ao_atom)]
     count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)
@@ -73,26 +86,85 @@ def _mo_tensor(cfg: WavefunctionConfig, params: WavefunctionParams,
                                   tile_k=tk, tile_e=te), count
     if cfg.method == 'dense' or cfg.k_max <= 0:
         return mos.mo_products_dense(params.mo, B), count
-    idx, valid, _ = aos.active_ao_indices(cfg.basis, atom_active, cfg.k_max)
+    idx, valid, _ = aos.active_ao_indices(cfg.basis, atom_active, cfg.k_max,
+                                          ao_mask=ao_mask)
     Bp = aos.pack_b(B, idx, valid)
     return mos.mo_products_sparse(params.mo, Bp, idx), count
 
 
+def _mo_tensor_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
+                        R: jnp.ndarray):
+    """Ensemble MO tensor: one fused pass over all walkers.
+
+    R: (W, n_e, 3).  Returns Cw: (W, n_rows, n_e, 5) and count: (W, n_e).
+
+    One AO evaluation covers the whole population (B keeps the walker axis —
+    the cheap layout); each product method then flattens exactly the axis it
+    profits from:
+
+      * dense  — one batched GEMM against the shared A (no layout change);
+      * sparse — per-electron gather flattened walker-major, so the scan's
+        gathered-A working set stays cache-sized instead of growing by W
+        (per-walker vmap multiplies the per-chunk gather by W);
+      * kernel — B merged to the electron-major (n_ao, W*n_e*5) 2-D layout,
+        and tiles re-tuned (``ensemble_tiles``) because the flattened column
+        axis can fill far wider tiles than one walker's n_e ever could.
+    """
+    W, n_e, _ = R.shape
+    Bw, atom_active = aos.eval_ao_block(cfg.basis, params.coords, R)
+    ao_mask = atom_active[..., jnp.asarray(cfg.basis.ao_atom)]  # (W, n_e, ao)
+    count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)         # (W, n_e)
+    n_rows = params.mo.shape[0]
+
+    if cfg.method == 'kernel':
+        from repro.kernels.sparse_mo.ops import (ensemble_tiles,
+                                                 sparse_mo_products)
+        B2 = jnp.moveaxis(Bw, 0, 1).reshape(Bw.shape[1], W * n_e, 5)
+        to, tk, te = ensemble_tiles(cfg.kernel_tiles, n_rows, W * n_e,
+                                    cap_e=cfg.kernel_ensemble_tile_cap)
+        C = sparse_mo_products(params.mo, B2,
+                               ao_mask.reshape(W * n_e, -1),
+                               tile_o=to, tile_k=tk, tile_e=te)
+        return jnp.moveaxis(C.reshape(n_rows, W, n_e, 5), 1, 0), count
+    if cfg.method == 'dense' or cfg.k_max <= 0:
+        Cw = jnp.einsum('oa,waec->woec', params.mo, Bw,
+                        preferred_element_type=jnp.float32)
+        return Cw, count
+    idx, valid, _ = aos.active_ao_indices(
+        cfg.basis, atom_active.reshape(W * n_e, -1), cfg.k_max,
+        ao_mask=ao_mask.reshape(W * n_e, -1))
+    Bp = jax.vmap(aos.pack_b)(Bw, idx.reshape(W, n_e, -1),
+                              valid.reshape(W, n_e, -1))        # (W,n_e,K,5)
+    C = mos.mo_products_sparse(params.mo, Bp.reshape(W * n_e, -1, 5), idx,
+                               chunk=mos.default_chunk(W * n_e,
+                                                       ensemble=True))
+    return jnp.moveaxis(C.reshape(n_rows, W, n_e, 5), 1, 0), count
+
+
 def _slater_blocks(cfg: WavefunctionConfig, C: jnp.ndarray):
-    """Rearrange C rows into the stacked (orb, elec, 5) det layout."""
+    """Rearrange C rows into the stacked (..., orb, elec, 5) det layout.
+
+    C may carry a leading walker axis: the split only touches the last three
+    dims (rows, electrons, components).
+    """
     if cfg.shared_orbitals:
-        up = C[:cfg.n_up, :cfg.n_up, :]
-        dn = C[:cfg.n_dn, cfg.n_up:, :]
+        up = C[..., :cfg.n_up, :cfg.n_up, :]
+        dn = C[..., :cfg.n_dn, cfg.n_up:, :]
     else:
-        up = C[:cfg.n_up, :cfg.n_up, :]
-        dn = C[cfg.n_up:, cfg.n_up:, :]
+        up = C[..., :cfg.n_up, :cfg.n_up, :]
+        dn = C[..., cfg.n_up:, cfg.n_up:, :]
     return up, dn
 
 
-def psi_state(cfg: WavefunctionConfig, params: WavefunctionParams,
-              r_elec: jnp.ndarray) -> PsiState:
-    """Full per-walker evaluation: value, drift, local energy."""
-    C, count = _mo_tensor(cfg, params, r_elec)
+def _finish_state(cfg: WavefunctionConfig, params: WavefunctionParams,
+                  C: jnp.ndarray, r_elec: jnp.ndarray,
+                  count: jnp.ndarray) -> PsiState:
+    """Per-walker tail shared by ``psi_state`` and ``psi_state_batched``:
+    Slater blocks -> drift/Laplacian ratios -> Jastrow -> local energy.
+
+    C: (n_rows, n_e, 5); r_elec: (n_e, 3).  The batched path vmaps this, so
+    the Slater/Jastrow/energy math has a single source of truth.
+    """
     up, dn = _slater_blocks(cfg, C)
     su, lu, gu, qu, _ = slater._spin_block(up, cfg.ns_steps)
     if cfg.n_dn > 0:
@@ -116,6 +188,13 @@ def psi_state(cfg: WavefunctionConfig, params: WavefunctionParams,
     return PsiState(sign=sign, log_psi=logdet + jas.value, drift=drift,
                     e_loc=e_kin + e_pot, e_kin=e_kin, e_pot=e_pot,
                     ao_count=count)
+
+
+def psi_state(cfg: WavefunctionConfig, params: WavefunctionParams,
+              r_elec: jnp.ndarray) -> PsiState:
+    """Full per-walker evaluation: value, drift, local energy."""
+    C, count = _mo_tensor(cfg, params, r_elec)
+    return _finish_state(cfg, params, C, r_elec, count)
 
 
 def log_psi(cfg: WavefunctionConfig, params: WavefunctionParams,
@@ -152,7 +231,38 @@ def local_energy_autodiff(cfg: WavefunctionConfig,
     return e_kin + potential_energy(r_elec, params.coords, params.charges)
 
 
+def psi_state_batched(cfg: WavefunctionConfig, params: WavefunctionParams,
+                      R: jnp.ndarray) -> PsiState:
+    """Ensemble-flattened evaluation of a walker batch R: (W, n_e, 3).
+
+    Semantically identical to ``vmap(psi_state)`` (every field grows a
+    leading W axis) but structured as ONE fused pass over the flattened
+    ``W * n_e`` electron batch:
+
+      * one AO evaluation instead of W small ones;
+      * one MO product whose A-panel loads amortize over the whole
+        population and whose electron tiles/chunks actually fill
+        (paper §III's load amortization, scaled to the ensemble);
+      * one batched Slater solve: the shared per-walker tail
+        (``_finish_state``) is vmapped over the precomputed MO tensors, so
+        slogdet/inv/Newton–Schulz lower to batched LAPACK/GEMM streams over
+        (W, n, n) instead of W unbatched factorizations (the explicit API
+        for that batching is ``slater._spin_block_batched``).
+
+    The O(n_e^2) Jastrow and potential terms ride along in the same vmap —
+    they are pairwise in shape and a negligible share of the cost.
+    """
+    Cw, count = _mo_tensor_ensemble(cfg, params, R)   # (W, rows, n_e, 5)
+    return jax.vmap(partial(_finish_state, cfg, params))(Cw, R, count)
+
+
 def make_batched(cfg: WavefunctionConfig):
-    """vmap'd psi_state over a walker batch R: (W, n_e, 3)."""
+    """Walker-batch evaluator for R: (W, n_e, 3).
+
+    Ensemble-flattened fused pass by default; set
+    ``cfg.ensemble_eval=False`` for the legacy per-walker ``vmap``.
+    """
+    if cfg.ensemble_eval:
+        return partial(psi_state_batched, cfg)
     fn = partial(psi_state, cfg)
     return jax.vmap(fn, in_axes=(None, 0))

@@ -13,10 +13,15 @@ drives the BlockSpec index maps — the kernel only ever touches active
 All five right-hand sides (value, 3 gradients, Laplacian) ride in the same
 B panel (electron-major, 5 columns per electron), so the A panel is loaded
 once for all five products — the TPU version of the paper's unroll-and-jam
-load/store-ratio optimization.
+load/store-ratio optimization.  The column axis is walker-agnostic: an
+ensemble-flattened ``W * n_e`` electron batch uses the identical layout, and
+is how tiles actually fill for small per-walker electron counts (see
+``ops.ensemble_tile_e`` and DESIGN.md §4).
 
 Grid: (e_tiles, o_tiles, max_kb); k innermost so the C tile stays in VMEM
-across the accumulation.  Inactive k slots are skipped with pl.when.
+across the accumulation.  Inactive k slots are skipped with pl.when.  The
+e/o dimensions write disjoint C tiles and are declared ``parallel`` on real
+TPU; only k is ``arbitrary`` (sequential accumulation).
 """
 from __future__ import annotations
 
@@ -83,9 +88,16 @@ def sparse_mo_matmul(A: jnp.ndarray, B2d: jnp.ndarray,
         out_specs=pl.BlockSpec((tile_o, tile_e5),
                                lambda e, o, k, ids, na: (o, e)),
     )
+    kwargs = {}
+    if not interpret:
+        # e/o tiles are independent outputs; only the k accumulation is
+        # order-dependent.  (Interpret mode ignores compiler params.)
+        kwargs['compiler_params'] = pltpu.TPUCompilerParams(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'))
     return pl.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_orb, n_cols), jnp.float32),
         interpret=interpret,
+        **kwargs,
     )(block_ids, num_active, A, B2d)

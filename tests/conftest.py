@@ -1,0 +1,29 @@
+"""Shared test config: quick-tier selection.
+
+Two equivalent ways to run the quick tier (skips ``slow``-marked tests —
+full QMC blocks, big bench systems, benchmark-harness smoke):
+
+    pytest -m "not slow"
+    pytest --quick
+
+The ``slow`` marker itself is registered in pyproject.toml so both tiers run
+warning-free.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        '--quick', action='store_true', default=False,
+        help='skip slow-marked tests (same selection as -m "not slow")')
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.getoption('--quick'):
+        return
+    skip_slow = pytest.mark.skip(reason='--quick: slow test deselected')
+    for item in items:
+        if 'slow' in item.keywords:
+            item.add_marker(skip_slow)

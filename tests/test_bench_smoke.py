@@ -1,0 +1,33 @@
+"""Benchmark-harness smoke: `benchmarks/run.py` must not silently rot.
+
+Runs the real CLI in a subprocess (Table III quick set — seconds on CPU)
+and checks exit code, stdout rows, and the --json artifact schema that
+``BENCH_*.json`` perf-trajectory files rely on.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_run_tables_iii_smoke(tmp_path):
+    out = tmp_path / 'bench.json'
+    proc = subprocess.run(
+        [sys.executable, '-m', 'benchmarks.run', '--tables', 'III',
+         '--json', str(out)],
+        cwd=ROOT, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert 'table=III' in proc.stdout
+
+    doc = json.loads(out.read_text())
+    assert doc['meta']['quick'] is True
+    assert doc['meta']['failures'] == 0
+    assert doc['rows'], 'no benchmark rows emitted'
+    row = doc['rows'][0]
+    assert row['table'] == 'III'
+    assert 'direct_s' in row and 'spline_s' in row

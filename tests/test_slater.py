@@ -62,6 +62,24 @@ def test_drift_and_laplacian_vs_autodiff(n):
     np.testing.assert_allclose(lap, lap_ad, rtol=2e-2, atol=5e-3)
 
 
+def test_spin_block_batched_matches_unbatched():
+    """One batched LAPACK pass over (W, n, n, 5) == W unbatched passes."""
+    Cs = [_rand_C(s, 5)[0] for s in range(4)]
+    Cb = jnp.stack(Cs, axis=0)                     # (W, orb, elec, 5)
+    sb, lb, gb, qb, mb = slater._spin_block_batched(Cb, ns_steps=1)
+    for w, C in enumerate(Cs):
+        su, lu, gu, qu, mu = slater._spin_block(C, ns_steps=1)
+        np.testing.assert_allclose(np.asarray(sb[w]), np.asarray(su))
+        np.testing.assert_allclose(np.asarray(lb[w]), np.asarray(lu),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gb[w]), np.asarray(gu),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(qb[w]), np.asarray(qu),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(mb[w]), np.asarray(mu),
+                                   rtol=1e-4, atol=1e-4)
+
+
 def test_newton_schulz_refinement_improves_inverse():
     rng = np.random.default_rng(1)
     D64 = rng.normal(size=(64, 64))
@@ -72,6 +90,48 @@ def test_newton_schulz_refinement_improves_inverse():
     r0 = np.max(np.abs(np.asarray(D @ X0, np.float64) - eye))
     r1 = np.max(np.abs(np.asarray(D @ X1, np.float64) - eye))
     assert r1 <= r0 * 1.01  # refinement never makes it materially worse
+
+
+@pytest.mark.parametrize('n,j', [(4, 0), (8, 3), (16, 15), (32, 7)])
+def test_det_ratio_one_electron_vs_slogdet(n, j):
+    """Sherman–Morrison ratio/inverse vs full slogdet/inv recompute."""
+    rng = np.random.default_rng(n * 100 + j)
+    D = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)   # (orb, elec)
+    Minv = jnp.linalg.inv(D)
+    phi_new = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    ratio, Minv_new = slater.det_ratio_one_electron(Minv, phi_new, j)
+
+    D_new = D.at[:, j].set(phi_new)
+    s0, l0 = jnp.linalg.slogdet(D)
+    s1, l1 = jnp.linalg.slogdet(D_new)
+    ratio_exact = float(s1 * s0) * np.exp(float(l1 - l0))
+    np.testing.assert_allclose(float(ratio), ratio_exact, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(Minv_new),
+                               np.asarray(jnp.linalg.inv(D_new)),
+                               rtol=5e-2, atol=2e-3)
+
+
+def test_det_ratio_sequential_updates_stay_consistent():
+    """A sweep of single-electron moves: running SM inverse tracks the
+    recomputed inverse and the accumulated ratio tracks the det ratio."""
+    rng = np.random.default_rng(7)
+    n = 6
+    D = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    Minv = jnp.linalg.inv(D)
+    log_acc = 0.0
+    for j in range(n):
+        phi = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        ratio, Minv = slater.det_ratio_one_electron(Minv, phi, j)
+        log_acc += np.log(abs(float(ratio)))
+        D = D.at[:, j].set(phi)
+    _, l_final = jnp.linalg.slogdet(D)
+    _, l_init = jnp.linalg.slogdet(
+        jnp.asarray(np.random.default_rng(7).normal(size=(n, n)),
+                    jnp.float32))
+    np.testing.assert_allclose(np.asarray(Minv @ D), np.eye(n), atol=5e-3)
+    # accumulated |ratio| equals the total |det| change
+    np.testing.assert_allclose(log_acc, float(l_final - l_init), rtol=1e-3,
+                               atol=1e-3)
 
 
 def test_sherman_morrison_ratio_matches_recompute():
