@@ -7,8 +7,11 @@ Prints one CSV-ish line per measurement; ``--json`` additionally writes the
 rows as structured JSON (list of row objects + run metadata) so perf
 trajectories can accumulate in ``BENCH_*.json`` files.  --full runs the big
 systems (1ZE7/1AMB, minutes on CPU); default is the quick set.  Table VI is
-the ensemble-flattened vs per-walker-vmap comparison.  TPU-side roofline
-numbers live in experiments/roofline + EXPERIMENTS.md §Roofline.
+the ensemble-flattened vs per-walker-vmap comparison; Table VII is the
+unified-driver block loop, single-device vs walker-mesh-sharded (run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the sharded
+rows).  TPU-side roofline numbers live in experiments/roofline +
+EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
 
@@ -29,7 +32,7 @@ from benchmarks import tables as T
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V,VI')
+    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -37,7 +40,7 @@ def main(argv=None) -> int:
     want = set(args.tables.upper().split(','))
 
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
-           'V': T.table5, 'VI': T.table_ensemble}
+           'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

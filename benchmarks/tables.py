@@ -276,3 +276,51 @@ def table_ensemble(quick=True):
                 n_elec=n_e, vmap_s=round(t_v, 4), ensemble_s=round(t_e, 4),
                 speedup=round(t_v / t_e, 2)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Table VII: unified-driver block throughput (single-device vs walker mesh)
+# ---------------------------------------------------------------------------
+def table_driver(quick=True):
+    """One jit'd block through ``EnsembleDriver`` for each Propagator.
+
+    Rows report walker-generations/second for VMC and DMC at growing W,
+    plus a ``shards`` column: with >1 local device (e.g. under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8) the same block is
+    also run with the walker axis sharded over the ``walkers`` mesh — same
+    trajectories (per-walker RNG), so the ratio is pure scaling overhead.
+    """
+    import warnings
+
+    from repro.core.dmc import DMCPropagator
+    from repro.core.driver import EnsembleDriver
+    from repro.core.vmc import VMCPropagator
+    from repro.sharding import walkers_mesh
+    from repro.systems.molecule import build_wavefunction, h2
+
+    cfg, params = build_wavefunction(*h2())
+    steps = 20 if quick else 50
+    walker_counts = [64, 256] if quick else [64, 256, 1024]
+    n_dev = len(jax.local_devices())
+    meshes = [(1, None)] + ([(n_dev, walkers_mesh())] if n_dev > 1 else [])
+
+    rows = []
+    for method, prop in [('vmc', VMCPropagator(cfg, tau=0.3)),
+                         ('dmc', DMCPropagator(cfg, e_trial=-1.17,
+                                               tau=0.02))]:
+        for W in walker_counts:
+            for shards, mesh in meshes:
+                if W % max(shards, 1):
+                    continue
+                drv = EnsembleDriver(prop, steps, mesh=mesh, donate=False)
+                with warnings.catch_warnings():
+                    warnings.simplefilter('ignore')
+                    state = drv.init(params, jax.random.PRNGKey(0), W)
+                key = jax.random.PRNGKey(1)
+                t = _timeit(lambda: drv.run_block(params, state, key),
+                            repeats=3)
+                rows.append(dict(
+                    table='VII', system='h2', method=method, walkers=W,
+                    steps=steps, shards=shards, block_s=round(t, 4),
+                    walker_steps_per_s=int(W * steps / t)))
+    return rows

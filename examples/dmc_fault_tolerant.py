@@ -17,16 +17,17 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core.dmc import DMCPropagator
 from repro.runtime import (QMCManager, ResultDatabase, RunConfig,
                            critical_data_key)
-from repro.runtime.samplers import DMCSampler
+from repro.runtime.samplers import BlockSampler
 from repro.systems.molecule import build_wavefunction, h2
 
 
 def main():
     cfg, params = build_wavefunction(*h2())
-    sampler = DMCSampler(cfg, params, e_trial=-1.17, n_walkers=24,
-                         steps=25, tau=0.02, equil_steps=60)
+    prop = DMCPropagator(cfg, e_trial=-1.17, tau=0.02, equil_steps=60)
+    sampler = BlockSampler(prop, params, n_walkers=24, steps=25)
     run_key = critical_data_key(system='h2', tau=0.02,
                                 mo=np.asarray(params.mo))
     db_path = Path(tempfile.mkdtemp()) / 'h2_dmc.sqlite'

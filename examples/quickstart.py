@@ -1,4 +1,4 @@
-"""Quickstart: VMC + DMC on real molecules with the sparse-AO hot path.
+"""Quickstart: VMC + DMC on real molecules through the unified driver API.
 
 Runs in ~2 minutes on one CPU core:
   1. build an H2O trial wavefunction (core-Hamiltonian MOs + Jastrow);
@@ -7,16 +7,23 @@ Runs in ~2 minutes on one CPU core:
   4. verify the paper's three MO-product paths (dense O(N^3) oracle,
      sparse-AO gather, Pallas tile-sparse kernel) agree bitwise-ish.
 
+The method-specific physics lives in a ``Propagator`` (VMCPropagator /
+DMCPropagator); the jit'd block loop, walker pytree, and (optional) device
+sharding are one generic ``EnsembleDriver``.  To spread the walker axis
+over every local device, pass ``mesh=walkers_mesh()`` — same trajectories
+as the single-device run (bitwise for power-of-two walkers-per-shard;
+DESIGN.md §5).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dmc import init_dmc, make_dmc_block, update_e_trial
-from repro.core.vmc import init_walkers, make_vmc_block
+from repro.core.dmc import DMCPropagator, init_dmc
+from repro.core.driver import EnsembleDriver
+from repro.core.vmc import VMCPropagator
 from repro.core.wavefunction import psi_state
 from repro.systems.molecule import build_wavefunction, water
 
@@ -34,26 +41,28 @@ def main():
         print(f'   {method:6s}: E_L = {float(st.e_loc):+.6f}')
 
     print('== VMC (256 walkers, 3 blocks x 60 steps)')
-    key = jax.random.PRNGKey(1)
-    ens = init_walkers(cfg, params, key, 256)
-    vblk = make_vmc_block(cfg, steps=60, tau=0.25)
+    # one driver per method; sharding across local devices is just
+    # EnsembleDriver(..., mesh=repro.sharding.walkers_mesh())
+    vmc = EnsembleDriver(VMCPropagator(cfg, tau=0.25), steps=60)
+    ens = vmc.init(params, jax.random.PRNGKey(1), n_walkers=256)
     for i in range(3):
-        ens, stats = vblk(params, ens, jax.random.PRNGKey(10 + i))
+        ens, stats = vmc.run_block(params, ens, jax.random.PRNGKey(10 + i))
         print(f'   block {i}: E = {float(stats.e_mean):+.4f}  '
-              f'accept = {float(stats.accept):.2f}')
+              f"accept = {float(stats.aux['accept']):.2f}")
     e_vmc = float(stats.e_mean)
 
     print('== FN-DMC (constant population, reconfiguration)')
-    st = init_dmc(ens, e_trial=e_vmc)
-    dblk = make_dmc_block(cfg, steps=60, tau=0.01)
-    st, _ = dblk(params, st, jax.random.PRNGKey(42))      # equilibrate
+    dmc = EnsembleDriver(DMCPropagator(cfg, e_trial=e_vmc, tau=0.01),
+                         steps=60)
+    st = init_dmc(ens, e_trial=e_vmc)      # reuse the equilibrated ensemble
+    st, _ = dmc.run_block(params, st, jax.random.PRNGKey(42))  # equilibrate
     es = []
     for i in range(4):
-        st, ds = dblk(params, st, jax.random.PRNGKey(100 + i))
-        st = update_e_trial(st, ds.e_mean)
+        st, ds = dmc.run_block(params, st, jax.random.PRNGKey(100 + i))
+        st = dmc.feedback(st, float(ds.e_mean))   # E_T update, one knob
         es.append(float(ds.e_mean))
         print(f'   block {i}: E = {es[-1]:+.4f}  '
-              f'accept = {float(ds.accept):.3f}')
+              f"accept = {float(ds.aux['accept']):.3f}")
     print(f'== E(VMC) = {e_vmc:+.4f}   E(DMC) = {np.mean(es):+.4f} '
           f'+/- {np.std(es) / np.sqrt(len(es)):.4f}  '
           '(DMC lowers the variational energy)')

@@ -1,3 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.driver import (BlockStats, EnsembleDriver, Population,
+                               Propagator, WALKER_AXIS, restart_ensemble)
+
+__all__ = ['BlockStats', 'EnsembleDriver', 'Population', 'Propagator',
+           'WALKER_AXIS', 'restart_ensemble']

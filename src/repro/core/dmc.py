@@ -12,20 +12,27 @@ Per generation (paper §II):
      Pi_t = prod_{s in window} w_bar_s, which weights the energy estimator
      (removes the finite-population bias, ref. [17]).
 
-The whole block is one jit'd lax.scan — zero host sync inside a block.
-Walker evaluation goes through ``vmc._evaluate``, i.e. the ensemble-flattened
-fused AO->MO->Slater pass by default (``cfg.ensemble_eval``).
+The method is ``DMCPropagator`` (init / propagate / block_stats /
+feedback); the jit'd ``lax.scan`` block loop and walker-axis sharding are
+the generic ``driver.EnsembleDriver``.  Under a sharded driver the
+reconfiguration is *global*: weights are all-gathered so the resampling is
+identical to the single-device population (walker exchange is the one
+collective DMC fundamentally needs).  ``dmc_block`` / ``make_dmc_block``
+remain as deprecated wrappers for one release (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from .driver import (BlockStats as DriverStats, EnsembleDriver, Population,
+                     merge_accepted, restart_ensemble)
 from .reconfig import reconfigure, global_weight_update
-from .vmc import WalkerEnsemble, _evaluate, _log_green
+from .vmc import (VMCPropagator, WalkerEnsemble, evaluate_ensemble,
+                  init_walkers, propose_diffusion)
 from .wavefunction import WavefunctionConfig, WavefunctionParams
 
 
@@ -36,6 +43,7 @@ class DMCState(NamedTuple):
 
 
 class DMCBlockStats(NamedTuple):
+    """Legacy DMC block stats, kept for the deprecated ``dmc_block`` API."""
     e_mean: jnp.ndarray        # global-weighted mixed estimator
     e2_mean: jnp.ndarray
     weight: jnp.ndarray        # sum of global weights (normalization)
@@ -44,59 +52,82 @@ class DMCBlockStats(NamedTuple):
     sign_flips: jnp.ndarray    # fraction of proposed node crossings
 
 
-def dmc_step(cfg, params, state: DMCState, key, tau):
-    ens = state.ens
-    kp, ka, kr = jax.random.split(key, 3)
-    eta = jax.random.normal(kp, ens.r.shape, dtype=ens.r.dtype)
-    r_new = ens.r + tau * ens.drift + jnp.sqrt(tau) * eta
-    new, _ = _evaluate(cfg, params, r_new)
+class DMCPropagator:
+    """Fixed-node DMC as a driver plug-in.
 
-    crossed = new.sign * ens.sign < 0          # fixed-node: reject crossings
-    log_ratio = (2.0 * (new.log_psi - ens.log_psi)
-                 + _log_green(ens.r, r_new, new.drift, tau)
-                 - _log_green(r_new, ens.r, ens.drift, tau))
-    metro = jnp.log(jax.random.uniform(ka, log_ratio.shape)) < log_ratio
-    accept = metro & ~crossed
-    pick = lambda a, b: jnp.where(
-        accept.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
-    moved = WalkerEnsemble(*(pick(a, b) for a, b in zip(new, ens)))
+    ``feedback`` is the single E_T damping knob: every between-block E_T
+    update (runtime feedback included) routes through ``update_e_trial``.
+    Cold starts are VMC-equilibrated through a nested (unsharded) driver;
+    restarts re-evaluate reservoir walkers via ``restart_ensemble``.
+    """
 
-    # effective time step compensates rejected moves (Umrigar '93)
-    acc_frac = jnp.mean(accept.astype(tau.dtype if hasattr(tau, 'dtype')
-                                      else jnp.float32))
-    tau_eff = tau * jnp.maximum(acc_frac, 1e-3)
-    w = jnp.exp(-0.5 * tau_eff *
-                (moved.e_loc + ens.e_loc - 2.0 * state.e_trial))
-    w = jnp.clip(w, 0.0, 4.0)                  # guard rare E_L spikes
+    aux_fields = ('accept', 'pop_weight', 'sign_flips')
 
-    idx = reconfigure(kr, w)
-    ens_next = jax.tree.map(lambda a: a[idx], moved)
-    log_hist, g_weight = global_weight_update(state.log_w_hist, jnp.mean(w))
-    out = (jnp.mean(moved.e_loc), g_weight, acc_frac,
-           jnp.mean(crossed.astype(jnp.float32)), jnp.mean(w))
-    return DMCState(ens=ens_next, log_w_hist=log_hist,
-                    e_trial=state.e_trial), out
+    def __init__(self, cfg: WavefunctionConfig, e_trial: float,
+                 tau: float = 0.02, window: int = 20, damping: float = 0.5,
+                 equil_steps: int = 0, vmc_tau: float = 0.3):
+        self.cfg, self.tau = cfg, float(tau)
+        self.e_trial0 = float(e_trial)
+        self.window, self.damping = int(window), float(damping)
+        self.equil_steps, self.vmc_tau = int(equil_steps), float(vmc_tau)
 
+    def init(self, params, key, n_walkers: int, walkers=None):
+        if walkers is not None:
+            ens = restart_ensemble(
+                walkers, n_walkers,
+                lambda r: evaluate_ensemble(self.cfg, params, r)[0])
+        else:
+            ens = init_walkers(self.cfg, params, key, n_walkers)
+            if self.equil_steps:
+                vmc = EnsembleDriver(VMCPropagator(self.cfg, self.vmc_tau),
+                                     self.equil_steps, donate=False)
+                ens, _ = vmc.run_block(params, ens,
+                                       jax.random.fold_in(key, 1))
+        return init_dmc(ens, e_trial=self.e_trial0, window=self.window)
 
-def dmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
-              state: DMCState, key: jax.Array, steps: int, tau: float):
-    """One DMC block (jit-able): scan of dmc_step + weighted averages."""
+    def propagate(self, params, state: DMCState, key, pop: Population):
+        ens = state.ens
+        kp, kr = jax.random.split(key)
+        new, log_ratio, u = propose_diffusion(self.cfg, params, ens, kp,
+                                              pop, self.tau)
+        crossed = new.sign * ens.sign < 0      # fixed-node: reject crossings
+        accept = (jnp.log(u) < log_ratio) & ~crossed
+        moved = merge_accepted(new, ens, accept)
 
-    def body(st, k):
-        st2, out = dmc_step(cfg, params, st, k, tau)
-        return st2, out
+        # effective time step compensates rejected moves (Umrigar '93);
+        # pop.mean of 0/1 is reduction-order exact for power-of-two shards
+        acc_frac = pop.mean(accept.astype(jnp.float32))
+        tau_eff = self.tau * jnp.maximum(acc_frac, 1e-3)
+        w = jnp.exp(-0.5 * tau_eff *
+                    (moved.e_loc + ens.e_loc - 2.0 * state.e_trial))
+        w = jnp.clip(w, 0.0, 4.0)              # guard rare E_L spikes
 
-    keys = jax.random.split(key, steps)
-    state_out, (e_hist, gw_hist, acc_hist, cross_hist, w_hist) = \
-        jax.lax.scan(body, state, keys)
-    wsum = jnp.sum(gw_hist)
-    e_mean = jnp.sum(gw_hist * e_hist) / wsum
-    e2_mean = jnp.sum(gw_hist * e_hist ** 2) / wsum
-    stats = DMCBlockStats(
-        e_mean=e_mean, e2_mean=e2_mean, weight=wsum,
-        accept=jnp.mean(acc_hist), pop_weight=jnp.mean(w_hist),
-        sign_flips=jnp.mean(cross_hist))
-    return state_out, stats
+        # global reconfiguration: identical resampling for any mesh shape
+        idx = reconfigure(kr, pop.gather(w))
+        moved_all = jax.tree.map(pop.gather, moved)
+        idx_local = pop.take_local(idx, ens.r.shape[0])
+        ens_next = jax.tree.map(lambda a: a[idx_local], moved_all)
+
+        mean_w = pop.mean(w)
+        log_hist, g_weight = global_weight_update(state.log_w_hist, mean_w)
+        out = (pop.mean(moved.e_loc), g_weight, acc_frac,
+               pop.mean(crossed.astype(jnp.float32)), mean_w)
+        return DMCState(ens=ens_next, log_w_hist=log_hist,
+                        e_trial=state.e_trial), out
+
+    def block_stats(self, params, state: DMCState, outs,
+                    pop: Population) -> DriverStats:
+        e, gw, acc, cross, w = outs            # (steps,) replicated scalars
+        wsum = jnp.sum(gw)
+        return DriverStats(
+            weight=wsum,
+            e_mean=jnp.sum(gw * e) / wsum,
+            e2_mean=jnp.sum(gw * e ** 2) / wsum,
+            aux=dict(accept=jnp.mean(acc), pop_weight=jnp.mean(w),
+                     sign_flips=jnp.mean(cross)))
+
+    def feedback(self, state: DMCState, e_estimate) -> DMCState:
+        return update_e_trial(state, e_estimate, damping=self.damping)
 
 
 def init_dmc(ens: WalkerEnsemble, e_trial: float,
@@ -106,13 +137,65 @@ def init_dmc(ens: WalkerEnsemble, e_trial: float,
                     e_trial=jnp.float32(e_trial))
 
 
-def make_dmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
-    fn = partial(dmc_block, cfg)
-    return jax.jit(lambda params, st, key: fn(params, st, key, steps, tau))
-
-
 def update_e_trial(state: DMCState, e_estimate, damping: float = 0.5):
     """Between-block E_T feedback (population control is already exact;
-    this just keeps weights O(1))."""
+    this just keeps weights O(1)).  The one damping knob — every E_T
+    update path (including runtime feedback) goes through here."""
     et = (1 - damping) * state.e_trial + damping * e_estimate
     return state._replace(e_trial=jnp.float32(et))
+
+
+def _legacy_stats(s: DriverStats) -> DMCBlockStats:
+    return DMCBlockStats(e_mean=s.e_mean, e2_mean=s.e2_mean, weight=s.weight,
+                         accept=s.aux['accept'],
+                         pop_weight=s.aux['pop_weight'],
+                         sign_flips=s.aux['sign_flips'])
+
+
+_DEPRECATION = ('%s is deprecated: build EnsembleDriver(DMCPropagator(cfg, '
+                'e_trial, tau), steps) (repro.core.driver) instead; this '
+                'wrapper is kept for one release.')
+
+# driver cache for the deprecated wrappers (see vmc._cached_driver): keyed
+# on cfg identity so repeated dmc_block calls reuse the compiled block.
+# The running E_T lives in DMCState, so e_trial=0.0 here is inert.
+_wrapper_drivers: dict = {}
+
+
+def _cached_driver(cfg, steps, tau):
+    key = ('dmc', id(cfg), steps, tau)
+    entry = _wrapper_drivers.get(key)
+    if entry is None or entry[0] is not cfg:
+        entry = (cfg, EnsembleDriver(DMCPropagator(cfg, e_trial=0.0,
+                                                   tau=tau),
+                                     steps, donate=False))
+        _wrapper_drivers[key] = entry
+    return entry[1]
+
+
+def dmc_step(cfg, params, state: DMCState, key, tau):
+    """One DMC generation (single-device, unsharded)."""
+    prop = DMCPropagator(cfg, e_trial=0.0, tau=tau)
+    return prop.propagate(params, state, key, Population())
+
+
+def dmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
+              state: DMCState, key: jax.Array, steps: int, tau: float):
+    """Deprecated: one DMC block through the unified driver."""
+    warnings.warn(_DEPRECATION % 'dmc_block', DeprecationWarning,
+                  stacklevel=2)
+    st, stats = _cached_driver(cfg, steps, tau).run_block(params, state, key)
+    return st, _legacy_stats(stats)
+
+
+def make_dmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
+    """Deprecated: jit'd block runner with static config."""
+    warnings.warn(_DEPRECATION % 'make_dmc_block', DeprecationWarning,
+                  stacklevel=2)
+    drv = _cached_driver(cfg, steps, tau)
+
+    def run(params, state, key):
+        st, stats = drv.run_block(params, state, key)
+        return st, _legacy_stats(stats)
+
+    return run

@@ -1,17 +1,25 @@
 """Variational Monte Carlo: all-electron drift-diffusion Metropolis sampling.
 
-One block = ``steps`` Monte Carlo generations over a local walker population
+One block = ``steps`` Monte Carlo generations over a walker population
 (paper §V: a block is the unit of work whose average is an i.i.d. Gaussian
 sample; blocks are droppable/truncatable without bias).
+
+The method lives in ``VMCPropagator`` (init / propagate / block_stats);
+the block loop, jit, and walker-axis sharding are the generic
+``driver.EnsembleDriver``.  ``vmc_block`` / ``make_vmc_block`` remain as
+deprecated wrappers for one release (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from .driver import (BlockStats as DriverStats, EnsembleDriver, Population,
+                     merge_accepted, restart_ensemble)
 from .wavefunction import (WavefunctionConfig, WavefunctionParams, psi_state,
                            psi_state_batched)
 
@@ -25,7 +33,10 @@ class WalkerEnsemble(NamedTuple):
 
 
 class BlockStats(NamedTuple):
-    """Means over a block; combined by the runtime via weighted averaging."""
+    """Legacy VMC block stats, kept for the deprecated ``vmc_block`` API.
+
+    New code reads ``driver.BlockStats`` (accept/ao_fill/e_kin/e_pot move
+    into its typed ``aux``)."""
     e_mean: jnp.ndarray
     e2_mean: jnp.ndarray
     weight: jnp.ndarray       # total statistical weight (walker-steps)
@@ -35,12 +46,12 @@ class BlockStats(NamedTuple):
     e_pot: jnp.ndarray
 
 
-def _evaluate(cfg, params, r):
-    """Evaluate a walker batch r: (W, n_e, 3).
+def evaluate_ensemble(cfg, params, r):
+    """Evaluate a walker batch r: (W, n_e, 3) -> (WalkerEnsemble, PsiState).
 
     Default path is the ensemble-flattened fused AO->MO->Slater pass
     (``psi_state_batched``); ``cfg.ensemble_eval=False`` falls back to the
-    per-walker vmap.  DMC shares this entry point.
+    per-walker vmap.  Shared by every propagator (VMC, DMC, ...).
     """
     if cfg.ensemble_eval:
         st = psi_state_batched(cfg, params, r)
@@ -48,6 +59,9 @@ def _evaluate(cfg, params, r):
         st = jax.vmap(partial(psi_state, cfg, params))(r)
     return WalkerEnsemble(r=r, log_psi=st.log_psi, sign=st.sign,
                           drift=st.drift, e_loc=st.e_loc), st
+
+
+_evaluate = evaluate_ensemble      # deprecated alias (one release)
 
 
 def init_walkers(cfg: WavefunctionConfig, params: WavefunctionParams,
@@ -62,7 +76,7 @@ def init_walkers(cfg: WavefunctionConfig, params: WavefunctionParams,
     centers = params.coords[at]
     r = centers + spread * jax.random.normal(kb, (n_walkers, n_e, 3),
                                              dtype=params.coords.dtype)
-    ens, _ = _evaluate(cfg, params, r)
+    ens, _ = evaluate_ensemble(cfg, params, r)
     return ens
 
 
@@ -72,46 +86,119 @@ def _log_green(r_to, r_from, drift_from, tau):
     return -jnp.sum(d * d, axis=(-1, -2)) / (2.0 * tau)
 
 
-def vmc_step(cfg, params, ens: WalkerEnsemble, key, tau):
-    kp, ka = jax.random.split(key)
-    eta = jax.random.normal(kp, ens.r.shape, dtype=ens.r.dtype)
+def propose_diffusion(cfg, params, ens: WalkerEnsemble, key, pop: Population,
+                      tau):
+    """Drift-diffusion proposal shared by VMC and DMC (paper eq. 1).
+
+    Per-walker RNG streams (``pop.walker_keys`` folds the *global* walker
+    index) make proposals identical under any walker-axis sharding.
+    Returns (proposed ensemble, Metropolis log-ratio, per-walker uniforms).
+    """
+    def draw(k):
+        k_eta, k_u = jax.random.split(k)
+        eta = jax.random.normal(k_eta, ens.r.shape[1:], ens.r.dtype)
+        return eta, jax.random.uniform(k_u, ())
+
+    eta, u = jax.vmap(draw)(pop.walker_keys(key, ens.r.shape[0]))
     r_new = ens.r + tau * ens.drift + jnp.sqrt(tau) * eta
-    new, _ = _evaluate(cfg, params, r_new)
+    new, _ = evaluate_ensemble(cfg, params, r_new)
     log_ratio = (2.0 * (new.log_psi - ens.log_psi)
                  + _log_green(ens.r, r_new, new.drift, tau)
                  - _log_green(r_new, ens.r, ens.drift, tau))
-    accept = jnp.log(jax.random.uniform(ka, log_ratio.shape)) < log_ratio
-    pick = lambda a, b: jnp.where(
-        accept.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
-    merged = WalkerEnsemble(*(pick(a, b) for a, b in zip(new, ens)))
-    return merged, accept
+    return new, log_ratio, u
+
+
+class VMCPropagator:
+    """Metropolis sampling of |Psi_T|^2 as a driver plug-in (§II.A)."""
+
+    aux_fields = ('accept', 'ao_fill', 'e_kin', 'e_pot')
+
+    def __init__(self, cfg: WavefunctionConfig, tau: float = 0.3,
+                 spread: float = 1.5):
+        self.cfg, self.tau, self.spread = cfg, float(tau), float(spread)
+
+    def init(self, params, key, n_walkers: int, walkers=None):
+        if walkers is not None:
+            return restart_ensemble(
+                walkers, n_walkers,
+                lambda r: evaluate_ensemble(self.cfg, params, r)[0])
+        return init_walkers(self.cfg, params, key, n_walkers, self.spread)
+
+    def propagate(self, params, ens: WalkerEnsemble, key, pop: Population):
+        new, log_ratio, u = propose_diffusion(self.cfg, params, ens, key,
+                                              pop, self.tau)
+        accept = jnp.log(u) < log_ratio
+        merged = merge_accepted(new, ens, accept)
+        out = (pop.mean(merged.e_loc), pop.mean(merged.e_loc ** 2),
+               pop.mean(accept))
+        return merged, out
+
+    def block_stats(self, params, ens: WalkerEnsemble, outs,
+                    pop: Population) -> DriverStats:
+        e, e2, acc = outs                       # (steps,) global per-step means
+        # sparsity/energy split from the final configuration (cheap,
+        # representative — same choice as the legacy vmc_block)
+        _, st = evaluate_ensemble(self.cfg, params, ens.r)
+        w = jnp.float32(e.shape[0] * pop.size(ens.r))
+        return DriverStats(
+            weight=w, e_mean=jnp.mean(e), e2_mean=jnp.mean(e2),
+            aux=dict(accept=jnp.mean(acc),
+                     ao_fill=pop.mean(st.ao_count.astype(jnp.float32)),
+                     e_kin=pop.mean(st.e_kin), e_pot=pop.mean(st.e_pot)))
+
+
+def vmc_step(cfg, params, ens: WalkerEnsemble, key, tau):
+    """One Metropolis generation (single-device, unsharded)."""
+    pop = Population()
+    new, log_ratio, u = propose_diffusion(cfg, params, ens, key, pop, tau)
+    accept = jnp.log(u) < log_ratio
+    return merge_accepted(new, ens, accept), accept
+
+
+def _legacy_stats(s: DriverStats) -> BlockStats:
+    return BlockStats(e_mean=s.e_mean, e2_mean=s.e2_mean, weight=s.weight,
+                      accept=s.aux['accept'], ao_fill=s.aux['ao_fill'],
+                      e_kin=s.aux['e_kin'], e_pot=s.aux['e_pot'])
+
+
+_DEPRECATION = ('%s is deprecated: build EnsembleDriver(VMCPropagator(cfg, '
+                'tau), steps) (repro.core.driver) instead; this wrapper is '
+                'kept for one release.')
+
+# driver cache for the deprecated wrappers: configs hold arrays (unhashable)
+# so key on identity and pin the cfg so the id can't be recycled — repeated
+# vmc_block calls must hit the driver's compiled block, not retrace it
+_wrapper_drivers: dict = {}
+
+
+def _cached_driver(cfg, steps, tau):
+    key = ('vmc', id(cfg), steps, tau)
+    entry = _wrapper_drivers.get(key)
+    if entry is None or entry[0] is not cfg:
+        entry = (cfg, EnsembleDriver(VMCPropagator(cfg, tau), steps,
+                                     donate=False))
+        _wrapper_drivers[key] = entry
+    return entry[1]
 
 
 def vmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
               ens: WalkerEnsemble, key: jax.Array, steps: int,
               tau: float):
-    """Run one VMC block; returns (ensemble, BlockStats). jit-able."""
-
-    def body(carry, k):
-        e, = carry
-        e2, acc = vmc_step(cfg, params, e, k, tau)
-        out = (e2.e_loc, acc.astype(jnp.float32))
-        return (e2,), out
-
-    keys = jax.random.split(key, steps)
-    (ens_out,), (e_hist, acc_hist) = jax.lax.scan(body, (ens,), keys)
-    # sparsity stats from the final configuration (cheap, representative)
-    _, st = _evaluate(cfg, params, ens_out.r)
-    w = jnp.float32(e_hist.size)
-    stats = BlockStats(
-        e_mean=jnp.mean(e_hist), e2_mean=jnp.mean(e_hist ** 2), weight=w,
-        accept=jnp.mean(acc_hist),
-        ao_fill=jnp.mean(st.ao_count.astype(jnp.float32)),
-        e_kin=jnp.mean(st.e_kin), e_pot=jnp.mean(st.e_pot))
-    return ens_out, stats
+    """Deprecated: one VMC block through the unified driver."""
+    warnings.warn(_DEPRECATION % 'vmc_block', DeprecationWarning,
+                  stacklevel=2)
+    st, stats = _cached_driver(cfg, steps, tau).run_block(params, ens, key)
+    return st, _legacy_stats(stats)
 
 
 def make_vmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
-    """jit'd block runner with static config."""
-    fn = partial(vmc_block, cfg)
-    return jax.jit(lambda params, ens, key: fn(params, ens, key, steps, tau))
+    """Deprecated: jit'd block runner with static config."""
+    warnings.warn(_DEPRECATION % 'make_vmc_block', DeprecationWarning,
+                  stacklevel=2)
+    drv = _cached_driver(cfg, steps, tau)
+
+    def run(params, ens, key):
+        st, stats = drv.run_block(params, ens, key)
+        return st, _legacy_stats(stats)
+
+    return run

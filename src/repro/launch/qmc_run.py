@@ -2,11 +2,16 @@
 
     manager -> data server (sqlite DB) -> forwarder tree -> workers
 
-Each worker thread drives a jit'd VMC/DMC block sampler over its private
-walker population (paper: one single-core executable per CPU core; here one
-thread per worker, XLA releasing the GIL).  The database IS the checkpoint:
-re-running with the same --db resumes from the stored walker reservoir and
-keeps appending blocks under the same CRC-32 run key.
+Each worker thread drives one generic ``BlockSampler`` — a jit'd
+``EnsembleDriver`` block loop over the method's ``Propagator`` plug-in
+(VMC/DMC) — over its private walker population.  ``--shards N`` sharding:
+each worker's walker axis is distributed over N local devices through the
+driver's ``walkers`` mesh — bit-identical trajectories to --shards 1 for
+power-of-two walkers-per-shard, fp32-reduction-tolerance stats otherwise
+(DESIGN.md §5).
+The database IS the checkpoint: re-running with the same --db resumes from
+the stored walker reservoir and keeps appending blocks under the same
+CRC-32 run key.
 
   PYTHONPATH=src python -m repro.launch.qmc_run --system h2 --method dmc \
       --workers 4 --blocks 40 --db /tmp/h2.sqlite
@@ -19,7 +24,7 @@ import numpy as np
 
 from repro.runtime import (QMCManager, ResultDatabase, RunConfig,
                            critical_data_key)
-from repro.runtime.samplers import DMCSampler, VMCSampler
+from repro.runtime.samplers import BlockSampler
 
 
 def build_system(name: str, method: str):
@@ -34,6 +39,17 @@ def build_system(name: str, method: str):
     return build_bench_wavefunction(sysb, method='sparse')
 
 
+def build_propagator(method: str, cfg, tau: float, e_trial=None,
+                     equil_steps: int = 100):
+    """CLI-level method selection — the one place VMC vs DMC is decided."""
+    from repro.core.dmc import DMCPropagator
+    from repro.core.vmc import VMCPropagator
+    if method == 'vmc':
+        return VMCPropagator(cfg, tau=tau)
+    e0 = e_trial if e_trial is not None else -0.5 * cfg.n_elec
+    return DMCPropagator(cfg, e_trial=e0, tau=tau, equil_steps=equil_steps)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument('--system', default='h2',
@@ -45,6 +61,10 @@ def main(argv=None):
     ap.add_argument('--steps', type=int, default=50,
                     help='MC generations per sub-block')
     ap.add_argument('--blocks', type=int, default=20)
+    ap.add_argument('--shards', type=int, default=1,
+                    help='device shards for each walker ensemble '
+                         '(1: single-device; N: walkers mesh over N '
+                         'local devices)')
     ap.add_argument('--target-error', type=float, default=0.0)
     ap.add_argument('--wall-clock', type=float, default=0.0)
     ap.add_argument('--tau', type=float, default=0.0)
@@ -55,14 +75,13 @@ def main(argv=None):
 
     cfg, params = build_system(args.system, args.method)
     tau = args.tau or (0.3 if args.method == 'vmc' else 0.02)
-    if args.method == 'vmc':
-        sampler = VMCSampler(cfg, params, n_walkers=args.walkers,
-                             steps=args.steps, tau=tau)
-    else:
-        e0 = args.e_trial if args.e_trial is not None else -0.5 * cfg.n_elec
-        sampler = DMCSampler(cfg, params, e_trial=e0,
-                             n_walkers=args.walkers, steps=args.steps,
-                             tau=tau)
+    prop = build_propagator(args.method, cfg, tau, e_trial=args.e_trial)
+    mesh = None
+    if args.shards > 1:
+        from repro.sharding import walkers_mesh
+        mesh = walkers_mesh(args.shards)
+    sampler = BlockSampler(prop, params, n_walkers=args.walkers,
+                           steps=args.steps, mesh=mesh)
 
     run_key = critical_data_key(
         system=args.system, method=args.method, tau=tau,
@@ -74,7 +93,8 @@ def main(argv=None):
                    e_trial_feedback=(args.method == 'dmc'))
     mgr = QMCManager(sampler, run_key, rc, db=db, seed=args.seed)
     print(f'run_key={run_key} system={args.system} method={args.method} '
-          f'workers={args.workers} x {args.walkers} walkers')
+          f'workers={args.workers} x {args.walkers} walkers'
+          + (f' x {args.shards} shards' if args.shards > 1 else ''))
     avg = mgr.run()
     for err in mgr.worker_errors():
         print('WORKER ERROR:\n', err)

@@ -22,13 +22,15 @@ paper.  Here workers are threads (the samplers release the GIL inside XLA)
 and the tree is in-process queues — the protocol, fault paths, and unbiased-
 ness contract are what the tests exercise.
 """
-from repro.runtime.blocks import BlockResult, combine_blocks
+from repro.runtime.blocks import (BlockAccumulator, BlockResult,
+                                  combine_blocks)
 from repro.runtime.database import ResultDatabase, critical_data_key
 from repro.runtime.forwarder import Forwarder, build_tree
 from repro.runtime.manager import QMCManager, RunConfig
 from repro.runtime.reservoir import WalkerReservoir
 
 __all__ = [
-    'BlockResult', 'combine_blocks', 'ResultDatabase', 'critical_data_key',
-    'Forwarder', 'build_tree', 'QMCManager', 'RunConfig', 'WalkerReservoir',
+    'BlockAccumulator', 'BlockResult', 'combine_blocks', 'ResultDatabase',
+    'critical_data_key', 'Forwarder', 'build_tree', 'QMCManager',
+    'RunConfig', 'WalkerReservoir',
 ]

@@ -16,6 +16,58 @@ from typing import Mapping
 
 
 @dataclasses.dataclass(frozen=True)
+class BlockAccumulator:
+    """Typed weighted accumulator — THE combination rule for block stats.
+
+    Replaces the stringly ``{'weight','e_mean','e2_mean','aux'}`` dicts:
+    every entry except ``weight`` is a weighted mean, and ``merge`` is the
+    single source of truth for how two of them combine — used by the worker
+    to fold sub-blocks into a block and by ``combine_blocks`` for the
+    database running average.  Pure host-side floats (the runtime never
+    imports jax); build one from a device ``core.driver.BlockStats`` with
+    ``from_stats``.
+    """
+
+    weight: float = 0.0
+    e_mean: float = 0.0
+    e2_mean: float = 0.0
+    aux: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def from_stats(cls, stats) -> 'BlockAccumulator':
+        """From anything with weight/e_mean/e2_mean/aux attributes
+        (e.g. the jit'd driver's BlockStats) — converted to host floats."""
+        return cls(weight=float(stats.weight), e_mean=float(stats.e_mean),
+                   e2_mean=float(stats.e2_mean),
+                   aux={k: float(v) for k, v in dict(stats.aux).items()})
+
+    def merge(self, other: 'BlockAccumulator') -> 'BlockAccumulator':
+        """Weighted combination; aux keys missing on one side count as 0
+        (a sub-block that never measured a statistic dilutes it)."""
+        w = self.weight + other.weight
+        if w <= 0.0:
+            return self
+        mix = lambda a, b: (self.weight * a + other.weight * b) / w
+        keys = set(self.aux) | set(other.aux)
+        return BlockAccumulator(
+            weight=w, e_mean=mix(self.e_mean, other.e_mean),
+            e2_mean=mix(self.e2_mean, other.e2_mean),
+            aux={k: mix(self.aux.get(k, 0.0), other.aux.get(k, 0.0))
+                 for k in keys})
+
+    def is_valid(self) -> bool:
+        return (self.weight > 0.0 and math.isfinite(self.e_mean)
+                and math.isfinite(self.e2_mean))
+
+    def to_block(self, run_key: str, worker_id: int, block_id: int,
+                 job: str = '') -> 'BlockResult':
+        return BlockResult(run_key=run_key, worker_id=worker_id,
+                           block_id=block_id, weight=self.weight,
+                           e_mean=self.e_mean, e2_mean=self.e2_mean,
+                           aux=dict(self.aux), job=job)
+
+
+@dataclasses.dataclass(frozen=True)
 class BlockResult:
     """One block's sufficient statistics."""
 
@@ -59,10 +111,12 @@ def combine_blocks(blocks: list[BlockResult]) -> RunningAverage:
     if not blocks:
         return RunningAverage(0, 0.0, float('nan'), float('nan'),
                               float('inf'))
-    wsum = sum(b.weight for b in blocks)
-    e = sum(b.weight * b.e_mean for b in blocks) / wsum
-    e2 = sum(b.weight * b.e2_mean for b in blocks) / wsum
-    var = max(e2 - e * e, 0.0)
+    acc = BlockAccumulator()
+    for b in blocks:           # same merge rule the workers use sub-block-wise
+        acc = acc.merge(BlockAccumulator(b.weight, b.e_mean, b.e2_mean,
+                                         dict(b.aux)))
+    wsum, e = acc.weight, acc.e_mean
+    var = max(acc.e2_mean - e * e, 0.0)
     if len(blocks) > 1:
         # weighted variance of block means around the global mean
         num = sum(b.weight * (b.e_mean - e) ** 2 for b in blocks)

@@ -2,7 +2,8 @@
 
 Responsibilities (paper-faithful):
   * spawn the data server (root forwarder + database) and the forwarder tree;
-  * start workers with distinct seeds and reservoir-sampled initial walkers;
+  * start workers with collision-free RNG streams (fold_in on worker id)
+    and reservoir-sampled initial walkers;
   * periodically query the database, compute the running average, decide the
     running/stopping state (wall-clock limit, error-bar target, block count);
   * E_T feedback for DMC (between blocks — never inside one);
@@ -35,8 +36,9 @@ class RunConfig:
     poll_interval: float = 0.05
     subblocks_per_block: int = 4
     n_kept: int = 64                 # walker reservoir size
-    e_trial_feedback: bool = False   # DMC E_T update between polls
-    feedback_damping: float = 0.5
+    e_trial_feedback: bool = False   # DMC E_T update between polls; the
+    #                                  damping lives on DMCPropagator (the
+    #                                  one knob), not here
     drain_timeout: float = 3.0
 
 
@@ -74,8 +76,11 @@ class QMCManager:
                 if len(r) == 0:
                     r.add(res[0], res[1])
                 init_walkers = r.sample(16, rng)
+        # one base seed for the run; per-worker/per-sub-block streams are
+        # derived by fold_in(PRNGKey(seed), worker_id/step) in the sampler,
+        # so streams never collide however many workers or blocks a run has
         w = Worker(wid, self.sampler, self.run_key, fwd,
-                   seed=self._seed + 1000 * (wid + 1),
+                   seed=self._seed,
                    subblocks_per_block=self.cfg.subblocks_per_block,
                    init_walkers=init_walkers, job=self.job_id)
         self.workers.append(w)

@@ -1,93 +1,94 @@
-"""Adapters wrapping the jit'd VMC/DMC block functions as runtime Samplers.
+"""The runtime adapter from Propagators to the worker Sampler protocol.
 
-Each worker owns a *private* walker population (paper §II.B: no communication
-between populations).  A sub-block here is one jit'd `lax.scan` over `steps`
-generations; the runtime composes sub-blocks into droppable/truncatable
-blocks.
+``BlockSampler`` wraps any ``core.driver.Propagator`` behind one generic
+adapter: the runtime has zero method-specific branches — VMC vs DMC is
+decided once, where the propagator is constructed (launcher / user code).
+
+Each worker owns a *private* walker population (paper §II.B: no
+communication between populations) — or, with a ``mesh``, one population
+device-sharded over the local ``walkers`` mesh axis.  A sub-block is one
+jit'd ``lax.scan`` over ``steps`` generations; the runtime composes
+sub-blocks into droppable/truncatable blocks via ``BlockAccumulator``.
+
+RNG: the state threaded through the worker is ``(worker_key, prop_state)``;
+sub-block keys are ``fold_in(worker_key, step)`` — no seed arithmetic, so
+worker streams can never alias however many sub-blocks a run takes.
+
+``VMCSampler`` / ``DMCSampler`` remain as deprecated shims for one release.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.dmc import DMCState, dmc_block, init_dmc
-from repro.core.vmc import init_walkers, vmc_block
+from repro.core.dmc import DMCPropagator
+from repro.core.driver import EnsembleDriver
+from repro.core.vmc import VMCPropagator
 from repro.core.wavefunction import WavefunctionConfig, WavefunctionParams
+from repro.runtime.blocks import BlockAccumulator
 
 
-class VMCSampler:
-    def __init__(self, cfg: WavefunctionConfig, params: WavefunctionParams,
-                 n_walkers: int = 32, steps: int = 50, tau: float = 0.3):
-        self.cfg, self.params = cfg, params
-        self.n_walkers, self.steps, self.tau = n_walkers, steps, tau
-        self._block = jax.jit(
-            lambda p, ens, key: vmc_block(cfg, p, ens, key, steps, tau))
+class BlockSampler:
+    """Generic Sampler: (Propagator, params) -> worker-facing block runner."""
+
+    def __init__(self, propagator, params, n_walkers: int = 32,
+                 steps: int = 50, mesh=None):
+        self.propagator = propagator
+        self.params = params
+        self.n_walkers = int(n_walkers)
+        self.driver = EnsembleDriver(propagator, steps, mesh=mesh)
 
     def init_state(self, worker_id: int, seed: int, walkers=None):
-        key = jax.random.PRNGKey(seed)
-        ens = init_walkers(self.cfg, self.params, key, self.n_walkers)
-        if walkers is not None:                 # reservoir restart
-            r = jnp.asarray(walkers, jnp.float32)
-            reps = int(np.ceil(self.n_walkers / r.shape[0]))
-            r = jnp.tile(r, (reps, 1, 1))[:self.n_walkers]
-            from repro.core.vmc import _evaluate
-            ens, _ = _evaluate(self.cfg, self.params, r)
-        return ens
+        wkey = jax.random.fold_in(jax.random.PRNGKey(seed), worker_id)
+        k_init, _ = jax.random.split(wkey)     # sub-blocks use the other half
+        state = self.driver.init(self.params, k_init, self.n_walkers,
+                                 walkers)
+        return (wkey, state)
 
     def set_e_trial(self, state, e_trial: float):
-        return state                            # VMC has no E_T
+        """Between-block scalar feedback (DMC E_T; no-op for VMC) — routed
+        through the propagator's one ``feedback``/``update_e_trial`` knob."""
+        wkey, st = state
+        return (wkey, self.driver.feedback(st, e_trial))
 
-    def run_subblock(self, ens, seed: int):
-        key = jax.random.PRNGKey(seed * 2 + 1)
-        ens, stats = self._block(self.params, ens, key)
-        out = dict(weight=float(stats.weight), e_mean=float(stats.e_mean),
-                   e2_mean=float(stats.e2_mean),
-                   aux={'accept': float(stats.accept),
-                        'ao_fill': float(stats.ao_fill)})
-        return ens, out, np.asarray(ens.r), np.asarray(ens.e_loc)
+    def run_subblock(self, state, step: int):
+        wkey, st = state
+        _, k_blocks = jax.random.split(wkey)
+        key = jax.random.fold_in(k_blocks, step)
+        st, stats = self.driver.run_block(self.params, st, key)
+        ens = st.ens if hasattr(st, 'ens') else st
+        return ((wkey, st), BlockAccumulator.from_stats(stats),
+                np.asarray(ens.r), np.asarray(ens.e_loc))
 
 
-class DMCSampler:
+_SHIM = ('%s is deprecated: construct BlockSampler(%s(cfg, ...), params, '
+         '...) instead; this shim is kept for one release.')
+
+
+class VMCSampler(BlockSampler):
+    """Deprecated shim over ``BlockSampler(VMCPropagator(...), ...)``."""
+
+    def __init__(self, cfg: WavefunctionConfig, params: WavefunctionParams,
+                 n_walkers: int = 32, steps: int = 50, tau: float = 0.3):
+        warnings.warn(_SHIM % ('VMCSampler', 'VMCPropagator'),
+                      DeprecationWarning, stacklevel=2)
+        super().__init__(VMCPropagator(cfg, tau), params,
+                         n_walkers=n_walkers, steps=steps)
+
+
+class DMCSampler(BlockSampler):
+    """Deprecated shim over ``BlockSampler(DMCPropagator(...), ...)``."""
+
     def __init__(self, cfg: WavefunctionConfig, params: WavefunctionParams,
                  e_trial: float, n_walkers: int = 32, steps: int = 50,
                  tau: float = 0.02, equil_steps: int = 100,
                  vmc_tau: float = 0.3):
-        self.cfg, self.params = cfg, params
-        self.n_walkers, self.steps, self.tau = n_walkers, steps, tau
-        self.e_trial0 = e_trial
-        self.equil_steps = equil_steps
-        self.vmc_tau = vmc_tau
-        self._block = jax.jit(
-            lambda p, st, key: dmc_block(cfg, p, st, key, steps, tau))
-        self._vmc = jax.jit(
-            lambda p, ens, key: vmc_block(cfg, p, ens, key, equil_steps,
-                                          vmc_tau))
-
-    def init_state(self, worker_id: int, seed: int, walkers=None):
-        key = jax.random.PRNGKey(seed)
-        ens = init_walkers(self.cfg, self.params, key, self.n_walkers)
-        if walkers is not None:
-            r = jnp.asarray(walkers, jnp.float32)
-            reps = int(np.ceil(self.n_walkers / r.shape[0]))
-            r = jnp.tile(r, (reps, 1, 1))[:self.n_walkers]
-            from repro.core.vmc import _evaluate
-            ens, _ = _evaluate(self.cfg, self.params, r)
-        else:                                   # cold start: VMC equilibrate
-            ens, _ = self._vmc(self.params, ens, jax.random.fold_in(key, 1))
-        return init_dmc(ens, e_trial=self.e_trial0)
-
-    def set_e_trial(self, state: DMCState, e_trial: float):
-        damped = 0.5 * float(state.e_trial) + 0.5 * e_trial
-        return state._replace(e_trial=jnp.float32(damped))
-
-    def run_subblock(self, state: DMCState, seed: int):
-        key = jax.random.PRNGKey(seed * 2 + 1)
-        state, stats = self._block(self.params, state, key)
-        out = dict(weight=float(stats.weight), e_mean=float(stats.e_mean),
-                   e2_mean=float(stats.e2_mean),
-                   aux={'accept': float(stats.accept),
-                        'pop_weight': float(stats.pop_weight)})
-        return state, out, np.asarray(state.ens.r), np.asarray(
-            state.ens.e_loc)
+        warnings.warn(_SHIM % ('DMCSampler', 'DMCPropagator'),
+                      DeprecationWarning, stacklevel=2)
+        super().__init__(
+            DMCPropagator(cfg, e_trial=e_trial, tau=tau,
+                          equil_steps=equil_steps, vmc_tau=vmc_tau),
+            params, n_walkers=n_walkers, steps=steps)

@@ -19,20 +19,23 @@ from typing import Callable, Protocol
 
 import numpy as np
 
-from repro.runtime.blocks import BlockResult
+from repro.runtime.blocks import BlockAccumulator, BlockResult
 from repro.runtime.forwarder import Forwarder
 
 
 class Sampler(Protocol):
-    """Adapter between the generic runtime and a jit'd sampler (VMC/DMC/...).
+    """Adapter between the generic runtime and a jit'd block runner
+    (``samplers.BlockSampler`` over any Propagator).
 
-    Implementations wrap jax functions; the runtime never imports jax."""
+    Implementations wrap jax functions; the runtime never imports jax.
+    ``step`` is the worker's monotone sub-block counter — implementations
+    derive the sub-block RNG as ``fold_in(worker_key, step)``, so streams
+    never alias however long the run gets."""
 
     def init_state(self, worker_id: int, seed: int, walkers=None): ...
 
-    def run_subblock(self, state, seed: int):
-        """-> (state, stats dict w/ weight|e_mean|e2_mean|aux,
-               walkers np, energies np)"""
+    def run_subblock(self, state, step: int):
+        """-> (state, BlockAccumulator, walkers np, energies np)"""
         ...
 
 
@@ -87,30 +90,20 @@ class Worker:
                     state = self.sampler.set_e_trial(state,
                                                      self.e_trial_update)
                     self.e_trial_update = None
-                acc_w = acc_e = acc_e2 = 0.0
-                aux_acc: dict = {}
+                acc = BlockAccumulator()
                 walkers = energies = None
                 for _ in range(self.subblocks_per_block):
                     if self._crash.is_set():
                         return                     # hard death: no flush
-                    state, stats, walkers, energies = \
-                        self.sampler.run_subblock(state, self.seed + step)
+                    state, sub, walkers, energies = \
+                        self.sampler.run_subblock(state, step)
                     step += 1
-                    w = float(stats['weight'])
-                    acc_w += w
-                    acc_e += w * float(stats['e_mean'])
-                    acc_e2 += w * float(stats['e2_mean'])
-                    for k, v in stats.get('aux', {}).items():
-                        aux_acc[k] = aux_acc.get(k, 0.0) + w * float(v)
+                    acc = acc.merge(sub)           # the one weighted-merge
                     if self._stop.is_set():
                         break                      # truncated block: flush
-                if acc_w > 0.0:
-                    blk = BlockResult(
-                        run_key=self.run_key, worker_id=self.worker_id,
-                        block_id=self.blocks_done, weight=acc_w,
-                        e_mean=acc_e / acc_w, e2_mean=acc_e2 / acc_w,
-                        aux={k: v / acc_w for k, v in aux_acc.items()},
-                        job=self.job)
+                if acc.is_valid():
+                    blk = acc.to_block(self.run_key, self.worker_id,
+                                       self.blocks_done, job=self.job)
                     self.forwarder.submit_blocks([blk])
                     if walkers is not None:
                         self.forwarder.submit_walkers(

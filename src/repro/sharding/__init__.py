@@ -1,5 +1,6 @@
+from repro.sharding.ensemble import walkers_mesh
 from repro.sharding.partition import (LOGICAL_RULES, named_sharding_tree,
                                       opt_state_specs, partition_spec_tree)
 
 __all__ = ['LOGICAL_RULES', 'named_sharding_tree', 'opt_state_specs',
-           'partition_spec_tree']
+           'partition_spec_tree', 'walkers_mesh']

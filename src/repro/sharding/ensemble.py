@@ -1,0 +1,35 @@
+"""Walker-ensemble mesh: the ``walkers`` axis for the unified QMC driver.
+
+The model stack partitions *parameters* (partition.py); QMC partitions the
+*walker population*: a 1-D device mesh whose single ``walkers`` axis the
+``core.driver.EnsembleDriver`` shard_maps the ensemble's leading axis over.
+Per-walker RNG streams are keyed on global walker indices, so any mesh
+built here reproduces the single-device run: bit-identical trajectories
+for power-of-two walkers-per-shard (where mean-of-{0,1} reductions are
+rounding-exact), within fp32 reduction tolerance otherwise (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.driver import WALKER_AXIS
+
+
+def walkers_mesh(n_shards: int | None = None,
+                 axis_name: str = WALKER_AXIS) -> Mesh | None:
+    """1-D mesh over local devices for walker-axis sharding.
+
+    ``n_shards``: device count (default: all local devices).  Returns
+    ``None`` for a single shard — callers treat an absent mesh as the
+    unsharded single-device fast path.
+    """
+    devices = jax.local_devices()
+    n = len(devices) if not n_shards else int(n_shards)
+    if n > len(devices):
+        raise ValueError(f'requested {n} walker shards but only '
+                         f'{len(devices)} local devices are visible')
+    if n <= 1:
+        return None
+    return Mesh(np.array(devices[:n]), (axis_name,))

@@ -4,8 +4,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.runtime import (QMCManager, ResultDatabase, RunConfig,
-                           WalkerReservoir, combine_blocks,
+from repro.runtime import (BlockAccumulator, QMCManager, ResultDatabase,
+                           RunConfig, WalkerReservoir, combine_blocks,
                            critical_data_key)
 from repro.runtime.blocks import BlockResult
 from repro.runtime.forwarder import build_tree
@@ -22,7 +22,9 @@ class FakeSampler:
         self.delay = delay
 
     def init_state(self, worker_id, seed, walkers=None):
-        rng = np.random.default_rng(seed)
+        # distinct streams per worker from one base seed (the real
+        # BlockSampler does fold_in(PRNGKey(seed), worker_id))
+        rng = np.random.default_rng([seed, worker_id])
         if walkers is not None:
             return {'rng': rng, 'restarted': True}
         return {'rng': rng, 'restarted': False}
@@ -31,13 +33,13 @@ class FakeSampler:
         state['e_trial'] = e_trial
         return state
 
-    def run_subblock(self, state, seed):
+    def run_subblock(self, state, step):
         if self.delay:
             time.sleep(self.delay)
         rng = state['rng']
         e = rng.normal(self.mu, self.sigma, size=64)
-        stats = dict(weight=float(e.size), e_mean=float(e.mean()),
-                     e2_mean=float((e ** 2).mean()), aux={})
+        stats = BlockAccumulator(weight=float(e.size), e_mean=float(e.mean()),
+                                 e2_mean=float((e ** 2).mean()))
         walkers = rng.normal(size=(self.n_walkers, 2, 3))
         return state, stats, walkers, e[:self.n_walkers]
 
@@ -193,16 +195,16 @@ def test_reservoir_stratified_selection():
 
 
 def test_qmc_end_to_end_through_runtime():
-    """Real DMC (H2) through the full manager/forwarder/db stack."""
-    import jax
-    from repro.core.jastrow import JastrowParams
-    import jax.numpy as jnp
-    from repro.runtime.samplers import DMCSampler
+    """Real DMC (H2) through the full manager/forwarder/db stack — the
+    generic BlockSampler over the DMC propagator plug-in."""
+    from repro.core.dmc import DMCPropagator
+    from repro.runtime.samplers import BlockSampler
     from repro.systems.molecule import build_wavefunction, h2
 
     cfg_wf, params = build_wavefunction(*h2())
-    sampler = DMCSampler(cfg_wf, params, e_trial=-1.17, n_walkers=24,
-                         steps=30, tau=0.02, equil_steps=60)
+    sampler = BlockSampler(
+        DMCPropagator(cfg_wf, e_trial=-1.17, tau=0.02, equil_steps=60),
+        params, n_walkers=24, steps=30)
     key = critical_data_key(name='h2-dmc', tau=0.02,
                             mo=np.asarray(params.mo))
     cfg = RunConfig(n_workers=2, max_blocks=10, poll_interval=0.05,
@@ -212,3 +214,34 @@ def test_qmc_end_to_end_through_runtime():
     assert not mgr.worker_errors(), mgr.worker_errors()
     assert avg.n_blocks >= 10
     assert abs(avg.energy - (-1.174)) < 0.08, avg
+
+
+def test_block_accumulator_weighted_merge():
+    """The one merge rule: weighted means, aux union, missing keys -> 0."""
+    a = BlockAccumulator(1.0, -1.0, 1.0, {'accept': 1.0})
+    b = BlockAccumulator(3.0, -2.0, 4.0, {'accept': 0.5, 'extra': 2.0})
+    m = a.merge(b)
+    assert m.weight == 4.0
+    assert m.e_mean == pytest.approx(-1.75)
+    assert m.e2_mean == pytest.approx((1.0 + 3 * 4.0) / 4)
+    assert m.aux['accept'] == pytest.approx((1.0 + 3 * 0.5) / 4)
+    assert m.aux['extra'] == pytest.approx(3 * 2.0 / 4)   # missing == 0
+    # merging into the empty accumulator is the identity
+    assert BlockAccumulator().merge(a) == a
+    # zero total weight stays invalid instead of dividing by zero
+    assert not BlockAccumulator().merge(BlockAccumulator()).is_valid()
+
+
+def test_block_accumulator_to_block_matches_combine():
+    """Sub-block accumulation == block-level weighted combination."""
+    subs = [BlockAccumulator(2.0, -1.0, 1.5, {'accept': 0.9}),
+            BlockAccumulator(6.0, -3.0, 9.5, {'accept': 0.7})]
+    acc = BlockAccumulator()
+    for s in subs:
+        acc = acc.merge(s)
+    blk = acc.to_block('k', worker_id=0, block_id=0)
+    as_blocks = combine_blocks(
+        [s.to_block('k', 0, i) for i, s in enumerate(subs)])
+    assert blk.weight == pytest.approx(as_blocks.weight)
+    assert blk.e_mean == pytest.approx(as_blocks.energy)
+    assert blk.aux['accept'] == pytest.approx(0.75)
