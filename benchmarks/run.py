@@ -10,7 +10,9 @@ systems (1ZE7/1AMB, minutes on CPU); default is the quick set.  Table VI is
 the ensemble-flattened vs per-walker-vmap comparison; Table VII is the
 unified-driver block loop, single-device vs walker-mesh-sharded (run under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the sharded
-rows).  TPU-side roofline numbers live in experiments/roofline +
+rows); Table VIII compares single-electron-move sweeps (Sherman–Morrison
+inverse updates) against per-move full recompute and the all-electron
+propagator.  TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
@@ -32,7 +34,7 @@ from benchmarks import tables as T
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII')
+    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -40,7 +42,8 @@ def main(argv=None) -> int:
     want = set(args.tables.upper().split(','))
 
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
-           'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver}
+           'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
+           'VIII': T.table_sem}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

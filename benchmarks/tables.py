@@ -279,6 +279,66 @@ def table_ensemble(quick=True):
 
 
 # ---------------------------------------------------------------------------
+# Table VIII: single-electron moves vs all-electron recompute
+# ---------------------------------------------------------------------------
+def table_sem(quick=True):
+    """Per-sweep cost of the Sherman–Morrison single-electron propagator.
+
+    For each bench system three jitted measurements at the same W:
+
+    * ``sem_sweep_s``      — one ``SEMVMCPropagator.propagate`` call:
+      n_e single-electron trials (AO values + dot + batched rank-1 update)
+      plus ONE full MO-tensor pass for the energy, zero factorizations;
+    * ``recompute_sweep_s`` — what the same sweep costs when every move
+      pays a full recompute (the paper's baseline): n_e x one
+      all-electron evaluation (AO + MO products + batched slogdet/inv);
+    * ``allelec_step_s``    — one all-electron ``VMCPropagator.propagate``
+      generation, for context (it moves all electrons in ONE trial, a
+      different kinetics with lower acceptance at large n_e).
+
+    ``speedup`` = recompute_sweep_s / sem_sweep_s: how much the maintained
+    inverse saves per sweep.  Grows with n_e (the paper's scaling story).
+    """
+    from repro.core.driver import Population
+    from repro.core.sem import SEMVMCPropagator
+    from repro.core.vmc import VMCPropagator, evaluate_ensemble
+    from repro.systems.bench import build_bench_wavefunction, \
+        make_bench_system
+
+    sizes = [30, 60] if quick else [30, 60, 120, 240]
+    W = 8
+    pop = Population()
+    rows = []
+    for n_elec in sizes:
+        s = make_bench_system('micro-peptide', n_elec=n_elec, seed=5)
+        cfg, params = build_bench_wavefunction(s, method='sparse', k_max=160)
+        n_e = s.mol.n_elec
+
+        sem = SEMVMCPropagator(cfg, step_size=0.4)
+        state = sem.init(params, jax.random.PRNGKey(0), W)
+        f_sem = jax.jit(lambda p, st, k: sem.propagate(p, st, k, pop))
+        t_sem = _timeit(f_sem, params, state, jax.random.PRNGKey(1))
+
+        vmc = VMCPropagator(cfg, tau=0.3)
+        ens = vmc.init(params, jax.random.PRNGKey(0), W)
+        f_vmc = jax.jit(lambda p, st, k: vmc.propagate(p, st, k, pop))
+        t_vmc = _timeit(f_vmc, params, ens, jax.random.PRNGKey(1))
+
+        # full-recompute baseline: one all-electron evaluation (the cost a
+        # naive single-electron sweep pays PER MOVE), times n_e moves
+        f_eval = jax.jit(lambda p, r: evaluate_ensemble(cfg, p, r)[0])
+        t_eval = _timeit(f_eval, params, ens.r)
+        rows.append(dict(
+            table='VIII', system=s.name, n_elec=n_e, walkers=W,
+            sem_sweep_s=round(t_sem, 4),
+            sem_move_us=round(1e6 * t_sem / n_e, 1),
+            recompute_sweep_s=round(n_e * t_eval, 4),
+            allelec_step_s=round(t_vmc, 4),
+            speedup=round(n_e * t_eval / t_sem, 2)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Table VII: unified-driver block throughput (single-device vs walker mesh)
 # ---------------------------------------------------------------------------
 def table_driver(quick=True):

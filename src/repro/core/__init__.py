@@ -1,6 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""QMC compute core: wavefunction pipeline, propagators, unified driver.
+
+The paper's primary contribution — the AO->MO->Slater evaluation pipeline
+and the method-agnostic Propagator/Driver API — lives here; accelerator
+kernels are under ``repro.kernels`` and the fault-tolerant runtime under
+``repro.runtime``.
+"""
 from repro.core.driver import (BlockStats, EnsembleDriver, Population,
                                Propagator, WALKER_AXIS, restart_ensemble)
 

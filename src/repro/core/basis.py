@@ -70,20 +70,24 @@ class BasisSet:
 
     @property
     def n_ao(self) -> int:
+        """Total number of atomic orbitals."""
         return int(self.ao_atom.shape[0])
 
     @property
     def n_prim(self) -> int:
+        """Padded primitive count per AO."""
         return int(self.prim_coeff.shape[1])
 
 
 def _radius_for(exponents, coefficients, eps: float) -> float:
     """Distance beyond which |g(r)| < eps (conservative, monotone tail)."""
     r = 1.0
-    def g(r):
+
+    def _g(r):
         return sum(abs(c) * math.exp(-min(a * r * r, 700.0))
                    for c, a in zip(coefficients, exponents))
-    while g(r) >= eps and r < 64.0:
+
+    while _g(r) >= eps and r < 64.0:
         r *= 1.25
     return r
 

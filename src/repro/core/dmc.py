@@ -37,6 +37,8 @@ from .wavefunction import WavefunctionConfig, WavefunctionParams
 
 
 class DMCState(NamedTuple):
+    """Driver state: walker ensemble + replicated E_T / weight history."""
+
     ens: WalkerEnsemble
     log_w_hist: jnp.ndarray    # (window,) trailing log population weights
     e_trial: jnp.ndarray       # () E_T reference energy
@@ -72,6 +74,7 @@ class DMCPropagator:
         self.equil_steps, self.vmc_tau = int(equil_steps), float(vmc_tau)
 
     def init(self, params, key, n_walkers: int, walkers=None):
+        """Cold start (VMC-equilibrated) or reservoir restart."""
         if walkers is not None:
             ens = restart_ensemble(
                 walkers, n_walkers,
@@ -86,6 +89,7 @@ class DMCPropagator:
         return init_dmc(ens, e_trial=self.e_trial0, window=self.window)
 
     def propagate(self, params, state: DMCState, key, pop: Population):
+        """One DMC generation: move, branch weights, reconfigure."""
         ens = state.ens
         kp, kr = jax.random.split(key)
         new, log_ratio, u = propose_diffusion(self.cfg, params, ens, kp,
@@ -117,6 +121,7 @@ class DMCPropagator:
 
     def block_stats(self, params, state: DMCState, outs,
                     pop: Population) -> DriverStats:
+        """Global-weight-weighted mixed estimator over the block."""
         e, gw, acc, cross, w = outs            # (steps,) replicated scalars
         wsum = jnp.sum(gw)
         return DriverStats(
@@ -127,11 +132,13 @@ class DMCPropagator:
                      sign_flips=jnp.mean(cross)))
 
     def feedback(self, state: DMCState, e_estimate) -> DMCState:
+        """Between-block E_T update (routed through ``update_e_trial``)."""
         return update_e_trial(state, e_estimate, damping=self.damping)
 
 
 def init_dmc(ens: WalkerEnsemble, e_trial: float,
              window: int = 20) -> DMCState:
+    """DMC state around an equilibrated ensemble (unit weight history)."""
     return DMCState(ens=ens,
                     log_w_hist=jnp.zeros((window,), jnp.float32),
                     e_trial=jnp.float32(e_trial))
@@ -194,8 +201,8 @@ def make_dmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
                   stacklevel=2)
     drv = _cached_driver(cfg, steps, tau)
 
-    def run(params, state, key):
+    def _run(params, state, key):
         st, stats = drv.run_block(params, state, key)
         return st, _legacy_stats(stats)
 
-    return run
+    return _run

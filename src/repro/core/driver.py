@@ -73,16 +73,19 @@ class Population:
         return x.shape[0] * self.n_shards
 
     def shard_index(self):
+        """This shard's position along the walker mesh axis (0 off-mesh)."""
         return (jax.lax.axis_index(self.axis_name) if self.axis_name
                 else jnp.int32(0))
 
     def mean(self, x):
+        """Global population mean of a walker-indexed array (pmean)."""
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.float32)
         m = jnp.mean(x)
         return jax.lax.pmean(m, self.axis_name) if self.axis_name else m
 
     def sum(self, x):
+        """Global population sum of a walker-indexed array (psum)."""
         s = jnp.sum(x)
         return jax.lax.psum(s, self.axis_name) if self.axis_name else s
 
@@ -174,6 +177,7 @@ class EnsembleDriver:
 
     # -- state construction / placement ---------------------------------
     def init(self, params, key, n_walkers: int, walkers=None):
+        """Build the propagator state and place it on the mesh (if any)."""
         if self.mesh is not None:
             n_sh = self.mesh.shape[self.axis_name]
             if n_walkers % n_sh:
@@ -205,11 +209,11 @@ class EnsembleDriver:
         return fn(params, state, key)
 
     def _scan(self, params, state, key, pop: Population):
-        def body(st, i):
+        def _body(st, i):
             return self.propagator.propagate(
                 params, st, jax.random.fold_in(key, i), pop)
 
-        state, outs = jax.lax.scan(body, state, jnp.arange(self.steps))
+        state, outs = jax.lax.scan(_body, state, jnp.arange(self.steps))
         return state, self.propagator.block_stats(params, state, outs, pop)
 
     def _build(self, state):

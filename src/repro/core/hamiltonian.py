@@ -9,6 +9,7 @@ import jax.numpy as jnp
 
 def potential_energy(r_elec: jnp.ndarray, coords: jnp.ndarray,
                      charges: jnp.ndarray) -> jnp.ndarray:
+    """V(R) for one walker: e-n attraction + e-e and n-n repulsion."""
     n_e = r_elec.shape[0]
     eye = jnp.eye(n_e, dtype=bool)
 

@@ -96,16 +96,16 @@ def _prim_kinetic(a, la, A, b, lb, B):
     """T_ab = -1/2 <a|del^2|b> via angular-momentum shifts on b."""
     lb = tuple(lb)
 
-    def S(lbx):
+    def _S(lbx):
         return _prim_overlap(a, la, A, b, lbx, B)
 
-    term = b * (2 * sum(lb) + 3) * S(lb)
+    term = b * (2 * sum(lb) + 3) * _S(lb)
     for x in range(3):
         up = list(lb); up[x] += 2
-        term += -2.0 * b * b * S(tuple(up))
+        term += -2.0 * b * b * _S(tuple(up))
         if lb[x] >= 2:
             dn = list(lb); dn[x] -= 2
-            term += -0.5 * lb[x] * (lb[x] - 1) * S(tuple(dn))
+            term += -0.5 * lb[x] * (lb[x] - 1) * _S(tuple(dn))
     return term
 
 

@@ -19,12 +19,15 @@ import jax.numpy as jnp
 
 
 class JastrowParams(NamedTuple):
+    """Padé Jastrow parameters (the e-e cusp strengths are fixed)."""
+
     b_ee: jnp.ndarray   # () Padé denominator, e-e
     b_en: jnp.ndarray   # () Padé denominator, e-n
     a_en: jnp.ndarray   # () e-n strength
 
 
 def default_params() -> JastrowParams:
+    """Reasonable starting parameters (b = 1, modest e-n strength)."""
     return JastrowParams(b_ee=jnp.float32(1.0), b_en=jnp.float32(1.0),
                          a_en=jnp.float32(0.5))
 
@@ -39,6 +42,8 @@ def _pade(r, a, b):
 
 
 class JastrowState(NamedTuple):
+    """J(R) and its per-electron derivatives for one walker."""
+
     value: jnp.ndarray     # () J(R)
     grad: jnp.ndarray      # (n_elec, 3)
     lap: jnp.ndarray       # (n_elec,) per-electron laplacian of J
@@ -83,3 +88,36 @@ def jastrow_state(params: JastrowParams, r_elec: jnp.ndarray,
 def jastrow_value(params: JastrowParams, r_elec, coords, charges, n_up):
     """Value-only path (for autodiff oracles and MC ratios)."""
     return jastrow_state(params, r_elec, coords, charges, n_up).value
+
+
+def jastrow_delta_one_electron(params: JastrowParams, r_elec: jnp.ndarray,
+                               j, r_new: jnp.ndarray, coords, charges,
+                               n_up: int):
+    """J(R with r_j -> r_new) - J(R): the single-electron-move ratio term.
+
+    Only the pairs involving electron ``j`` change, so the difference is
+    O(n_e + n_at) instead of the O(n_e^2) full ``jastrow_value`` — the
+    Jastrow half of the Sherman–Morrison fast path (``core.sem``).  ``j``
+    may be a traced index.
+
+    r_elec: (n_e, 3); r_new: (3,).  Returns a scalar.
+    """
+    n_e = r_elec.shape[0]
+    spin_up = jnp.arange(n_e) < n_up
+    a_ee = jnp.where(spin_up == spin_up[j], 0.25, 0.5).astype(r_elec.dtype)
+    other = (jnp.arange(n_e) != j).astype(r_elec.dtype)
+
+    def _ee(rj):
+        d = rj[None, :] - r_elec
+        r = jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-20)   # guard self-term
+        u, _, _ = _pade(r, a_ee, params.b_ee)
+        return jnp.sum(u * other)
+
+    def _en(rj):
+        d = rj[None, :] - coords
+        rn = jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-20)
+        u, _, _ = _pade(rn, -charges * params.a_en, params.b_en)
+        return jnp.sum(u)
+
+    r_old = r_elec[j]
+    return _ee(r_new) - _ee(r_old) + _en(r_new) - _en(r_old)

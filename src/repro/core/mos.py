@@ -68,7 +68,7 @@ def mo_products_sparse(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
     idx_ = jnp.pad(idx, ((0, pad), (0, 0)))
     nb = Bp_.shape[0] // chunk
 
-    def body(carry, eb):
+    def _body(carry, eb):
         bp, ix = eb                            # (chunk,K,5), (chunk,K)
         Ag = A[:, ix]                          # (n_orb, chunk, K)
         c = jnp.einsum('oek,ekf->oef', Ag, bp,
@@ -76,7 +76,7 @@ def mo_products_sparse(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
         return carry, c
 
     _, Cs = jax.lax.scan(
-        body, 0.,
+        _body, 0.,
         (Bp_.reshape(nb, chunk, *Bp.shape[1:]),
          idx_.reshape(nb, chunk, idx.shape[1])))
     C = jnp.moveaxis(Cs, 0, 1).reshape(A.shape[0], nb * chunk, 5)

@@ -1,0 +1,291 @@
+"""Single-electron-move VMC: Sherman–Morrison-updated Slater inverses.
+
+The paper's scaling argument (and the classic improved-scaling QMC line:
+Ahuja et al.'s insulator updates, Alfè & Gillan's localized orbitals) rests
+on moving ONE electron at a time: the determinant ratio for a proposed move
+of electron ``j`` is a single dot product against the maintained inverse
+Slater matrix, and an accepted move is a rank-1 Sherman–Morrison inverse
+update — O(n) accept/reject and O(n^2) update instead of the O(n^3)
+factorization the all-electron propagator pays every step.
+
+One ``propagate`` call is one *sweep*: every electron gets one Metropolis
+trial, batched over the whole walker ensemble (the ``(W, n, n)`` rank-1
+axpy is the hot path — jnp reference in ``kernels.sem_update.ref``, Pallas
+kernel in ``kernels.sem_update.kernel``, selected by
+``cfg.method == 'kernel'``).  Per move only AO *values* at the proposed
+point are needed (``aos.eval_ao_values``) plus an O(n_e) Jastrow delta
+(``jastrow.jastrow_delta_one_electron``).  After the sweep one full MO
+tensor pass assembles the local energy through the *maintained* inverses
+(``slater.ratios_from_inverse`` — no factorization), with
+
+* a Newton–Schulz ``refine_inverse`` corrector every sweep, and
+* a full ``slogdet``/``inv`` refresh every ``cfg.sem_refresh`` sweeps,
+
+bounding fp32 drift of the running inverse and log-determinant (DESIGN.md
+§6 has the error-bound argument; tests pin <=1e-4 agreement with a fresh
+recompute between refreshes).
+
+``SEMVMCPropagator`` is a standard ``driver.Propagator`` plug-in: the same
+``EnsembleDriver`` block loop, ``--shards N`` walker-mesh sharding, runtime
+``BlockSampler``, and ``qmc_run --method sem-vmc`` all work unchanged.
+Sampling statistics match the all-electron VMC propagator in distribution
+(both sample |Psi_T|^2) but not move-for-move — see DESIGN.md §6.
+
+k_max contract: per-move ratios use the *exact* (radius-screened) AO
+values, while the sparse/kernel post-sweep pipeline packs at most
+``cfg.k_max`` active AOs per electron.  These coincide only while k_max
+covers every electron's active set — the same no-overflow regime the rest
+of the sparse pipeline assumes (``aos.active_ao_indices`` returns the true
+counts for monitoring).  Under overflow the refresh would snap the state
+to a *truncated* wavefunction the move ratios never sampled; size k_max
+like the paper (~1.1x the measured max active count) to stay exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aos, slater
+from .driver import (BlockStats as DriverStats, Population, restart_ensemble)
+from .jastrow import jastrow_delta_one_electron, jastrow_state
+from .hamiltonian import potential_energy
+from .vmc import evaluate_ensemble, sample_positions
+from .wavefunction import (WavefunctionConfig, WavefunctionParams,
+                           _mo_tensor_ensemble, _slater_blocks)
+
+
+class SEMEnsemble(NamedTuple):
+    """Walker-major single-electron-move state (driver-sharded leading axis).
+
+    Unlike the all-electron ``WalkerEnsemble`` this carries the running
+    inverse Slater matrices per spin block — the state Sherman–Morrison
+    updates maintain across sweeps.
+    """
+
+    r: jnp.ndarray          # (W, n_e, 3)
+    minv_up: jnp.ndarray    # (W, n_up, n_up) running inverse (elec, orb)
+    minv_dn: jnp.ndarray    # (W, n_dn, n_dn)
+    sign: jnp.ndarray       # (W,) running sign of Det_up * Det_dn
+    logdet: jnp.ndarray     # (W,) running sum of log|det| over spins
+    log_psi: jnp.ndarray    # (W,) logdet + J (J recomputed every sweep)
+    e_loc: jnp.ndarray      # (W,)
+
+
+class SEMState(NamedTuple):
+    """Driver state: walker ensemble + replicated sweep counter."""
+
+    ens: SEMEnsemble
+    sweeps: jnp.ndarray     # () int32 sweeps since the last full refresh
+
+
+def _mo_blocks(cfg: WavefunctionConfig, params: WavefunctionParams):
+    """Per-spin MO coefficient panels (rows of the 'A' matrix)."""
+    A_up = params.mo[:cfg.n_up]
+    A_dn = (params.mo[:cfg.n_dn] if cfg.shared_orbitals
+            else params.mo[cfg.n_up:cfg.n_up + cfg.n_dn])
+    return A_up, A_dn
+
+
+def _apply_update(cfg, minv, u_vec, row, accept, e):
+    """Batched SM update: Pallas kernel when cfg.method == 'kernel'."""
+    if cfg.method == 'kernel':
+        from repro.kernels.sem_update.ops import sem_rank1_update
+        return sem_rank1_update(minv, u_vec, row, accept, e)
+    from repro.kernels.sem_update.ref import sem_update_ref
+    return sem_update_ref(minv, u_vec, row, accept, e)
+
+
+def _energy_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
+                     R, Cw, minv_up, minv_dn, sign, logdet) -> SEMEnsemble:
+    """Assemble the SEM ensemble from maintained inverses (no inversion).
+
+    The factorization-free sibling of ``wavefunction._finish_state``:
+    drift/Laplacian ratios come from ``slater.ratios_from_inverse`` against
+    the running ``minv`` blocks, so the only O(n^3)-ish work left per sweep
+    is the MO tensor build the energy needs anyway.
+    """
+    up, dn = _slater_blocks(cfg, Cw)
+    gu, qu = slater.ratios_from_inverse(up, minv_up)
+    if cfg.n_dn > 0:
+        gd, qd = slater.ratios_from_inverse(dn, minv_dn)
+        sgrad = jnp.concatenate([gu, gd], axis=1)
+        slap = jnp.concatenate([qu, qd], axis=1)
+    else:
+        sgrad, slap = gu, qu
+
+    def _tail(r, g, q):
+        jas = jastrow_state(params.jastrow, r, params.coords,
+                            params.charges, cfg.n_up)
+        lap_ratio = (q + jas.lap + jnp.sum(jas.grad * jas.grad, axis=-1)
+                     + 2.0 * jnp.sum(jas.grad * g, axis=-1))
+        e_kin = -0.5 * jnp.sum(lap_ratio)
+        e_pot = potential_energy(r, params.coords, params.charges)
+        return jas.value, e_kin, e_pot
+
+    jv, e_kin, e_pot = jax.vmap(_tail)(R, sgrad, slap)
+    return SEMEnsemble(r=R, minv_up=minv_up, minv_dn=minv_dn, sign=sign,
+                       logdet=logdet, log_psi=logdet + jv,
+                       e_loc=e_kin + e_pot)
+
+
+def evaluate_sem(cfg: WavefunctionConfig, params: WavefunctionParams,
+                 R: jnp.ndarray) -> SEMEnsemble:
+    """Full recompute of the SEM state for a walker batch R: (W, n_e, 3).
+
+    The cold-start / restart / refresh oracle: batched ``slogdet`` + ``inv``
+    (+ Newton–Schulz) per spin block, then the shared energy assembly.
+    """
+    W = R.shape[0]
+    Cw, _ = _mo_tensor_ensemble(cfg, params, R)
+    up, dn = _slater_blocks(cfg, Cw)
+    su, lu, _, _, mu = slater._spin_block_batched(up, cfg.ns_steps)
+    if cfg.n_dn > 0:
+        sd, ld, _, _, md = slater._spin_block_batched(dn, cfg.ns_steps)
+        sign, logdet = su * sd, lu + ld
+    else:
+        sign, logdet = su, lu
+        md = jnp.zeros((W, 0, 0), Cw.dtype)
+    return _energy_ensemble(cfg, params, R, Cw, mu, md, sign, logdet)
+
+
+def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
+                      carry):
+    """One Metropolis trial per electron of one spin block, all walkers.
+
+    ``carry`` is ``(r, minv, sign, logdet)`` with ``minv`` the running
+    inverse of THIS spin block; electrons ``offset .. offset+n_blk-1`` are
+    scanned in order, so a later electron sees the earlier accepted moves
+    of the same sweep (sequential-sweep semantics, batched over walkers).
+    Returns the updated carry and the per-move local acceptance fractions.
+    """
+    coords, charges = params.coords, params.charges
+
+    def _move(carry, e):
+        r, minv, sign, logdet = carry
+        j = offset + e
+        keys = jax.vmap(lambda k: jax.random.fold_in(k, j))(wkeys)
+
+        def _draw(k):
+            ke, ku = jax.random.split(k)
+            return (jax.random.normal(ke, (3,), r.dtype),
+                    jax.random.uniform(ku, ()))
+
+        eta, u_rand = jax.vmap(_draw)(keys)
+        r_old = r[:, j]                                   # (W, 3)
+        r_new = r_old + step_size * eta
+        vals, _ = aos.eval_ao_values(cfg.basis, coords, r_new)  # (ao, W)
+        phi = (A_blk @ vals).T                            # (W, n_blk)
+        ratio = jnp.einsum('wo,wo->w', minv[:, e, :], phi)
+        d_jas = jax.vmap(
+            lambda rw, rn: jastrow_delta_one_electron(
+                params.jastrow, rw, j, rn, coords, charges, cfg.n_up)
+        )(r, r_new)
+        log_ratio = jnp.log(jnp.abs(ratio) + 1e-30)
+        accept = jnp.log(jnp.maximum(u_rand, 1e-38)) < \
+            2.0 * (log_ratio + d_jas)
+
+        u_vec = jnp.einsum('weo,wo->we', minv, phi)       # (W, n_blk)
+        safe = jnp.where(jnp.abs(ratio) > 1e-20, ratio, 1.0)
+        row = minv[:, e, :] / safe[:, None]
+        minv = _apply_update(cfg, minv, u_vec, row, accept, e)
+        r = r.at[:, j].set(jnp.where(accept[:, None], r_new, r_old))
+        logdet = logdet + jnp.where(accept, log_ratio, 0.0)
+        sign = sign * jnp.where(accept, jnp.sign(ratio), 1.0)
+        return (r, minv, sign, logdet), jnp.mean(accept.astype(jnp.float32))
+
+    return jax.lax.scan(_move, carry, jnp.arange(n_blk))
+
+
+class SEMVMCPropagator:
+    """Metropolis sampling of |Psi_T|^2 by single-electron sweeps (§II.A).
+
+    A drop-in ``driver.Propagator``: same |Psi_T|^2 target distribution as
+    ``VMCPropagator`` (stats agree in distribution, not move-for-move), at
+    O(n^2) update cost per electron move instead of a full recompute.
+    """
+
+    aux_fields = ('accept', 'ao_fill', 'e_kin', 'e_pot')
+
+    def __init__(self, cfg: WavefunctionConfig, step_size: float = 0.3,
+                 spread: float = 1.5):
+        """``step_size`` is the isotropic Gaussian proposal width (bohr)."""
+        self.cfg = cfg
+        self.step_size = float(step_size)
+        self.spread = float(spread)
+
+    def init(self, params, key, n_walkers: int, walkers=None):
+        """Cold start (sampled positions) or reservoir restart."""
+        if walkers is not None:
+            ens = restart_ensemble(
+                walkers, n_walkers,
+                lambda r: evaluate_sem(self.cfg, params, r))
+        else:
+            r = sample_positions(params, key, n_walkers, self.cfg.n_elec,
+                                 self.spread)
+            ens = evaluate_sem(self.cfg, params, r)
+        return SEMState(ens=ens, sweeps=jnp.int32(0))
+
+    def propagate(self, params, state: SEMState, key, pop: Population):
+        """One sweep: n_e single-electron trials + energy + drift control."""
+        cfg = self.cfg
+        ens = state.ens
+        wkeys = pop.walker_keys(key, ens.r.shape[0])
+        A_up, A_dn = _mo_blocks(cfg, params)
+
+        carry = (ens.r, ens.minv_up, ens.sign, ens.logdet)
+        (r, minv_up, sign, logdet), acc_up = _sweep_spin_block(
+            cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size, carry)
+        minv_dn = ens.minv_dn
+        if cfg.n_dn > 0:
+            carry = (r, minv_dn, sign, logdet)
+            (r, minv_dn, sign, logdet), acc_dn = _sweep_spin_block(
+                cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
+                self.step_size, carry)
+            accepts = jnp.concatenate([acc_up, acc_dn])
+        else:
+            accepts = acc_up
+
+        # one full MO tensor pass: the energy needs it, and its D blocks
+        # feed the corrector/refresh that bound fp32 drift
+        Cw, _ = _mo_tensor_ensemble(cfg, params, r)
+        up, dn = _slater_blocks(cfg, Cw)
+        sweeps = state.sweeps + 1
+
+        def _refresh(_):
+            su, lu, _, _, mu = slater._spin_block_batched(up, cfg.ns_steps)
+            if cfg.n_dn > 0:
+                sd, ld, _, _, md = slater._spin_block_batched(dn,
+                                                              cfg.ns_steps)
+                return mu, md, su * sd, lu + ld
+            return mu, minv_dn, su, lu
+
+        def _correct(_):
+            mu = slater.refine_inverse(up[..., 0], minv_up)
+            md = (slater.refine_inverse(dn[..., 0], minv_dn)
+                  if cfg.n_dn > 0 else minv_dn)
+            return mu, md, sign, logdet
+
+        minv_up, minv_dn, sign, logdet = jax.lax.cond(
+            sweeps % cfg.sem_refresh == 0, _refresh, _correct, None)
+
+        ens_new = _energy_ensemble(cfg, params, r, Cw, minv_up, minv_dn,
+                                   sign, logdet)
+        out = (pop.mean(ens_new.e_loc), pop.mean(ens_new.e_loc ** 2),
+               pop.mean(jnp.mean(accepts)))
+        return SEMState(ens=ens_new, sweeps=sweeps % cfg.sem_refresh), out
+
+    def block_stats(self, params, state: SEMState, outs,
+                    pop: Population) -> DriverStats:
+        """Reduce per-sweep outputs; sparsity/energy split from the final
+        configuration (same convention as the all-electron VMC)."""
+        e, e2, acc = outs                    # (steps,) global per-sweep means
+        ens = state.ens
+        _, st = evaluate_ensemble(self.cfg, params, ens.r)
+        w = jnp.float32(e.shape[0] * pop.size(ens.r))
+        return DriverStats(
+            weight=w, e_mean=jnp.mean(e), e2_mean=jnp.mean(e2),
+            aux=dict(accept=jnp.mean(acc),
+                     ao_fill=pop.mean(st.ao_count.astype(jnp.float32)),
+                     e_kin=pop.mean(st.e_kin), e_pot=pop.mean(st.e_pot)))

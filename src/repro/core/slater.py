@@ -18,6 +18,8 @@ import jax.numpy as jnp
 
 
 class SlaterState(NamedTuple):
+    """Both spin determinants' value/derivative summary for one walker."""
+
     sign: jnp.ndarray      # () product of both spin signs
     logdet: jnp.ndarray    # () sum of log|det| over spins
     grad: jnp.ndarray      # (n_elec, 3) per-electron grad log Det
@@ -32,6 +34,22 @@ def refine_inverse(D: jnp.ndarray, X: jnp.ndarray, steps: int = 1):
     return X
 
 
+def ratios_from_inverse(C_blk: jnp.ndarray, Minv: jnp.ndarray):
+    """Drift and Laplacian ratios (eqs. 14/15) from a maintained inverse.
+
+    The factorization-free half of ``_spin_block``: single-electron-move
+    propagators keep ``Minv`` current via Sherman–Morrison updates
+    (``det_ratio_one_electron``) and only need these contractions to
+    assemble the local energy — no O(n^3) inversion per step.
+
+    C_blk: (..., orb, elec, 5); Minv: (..., elec, orb) (leading batch axes
+    broadcast).  Returns grad (..., elec, 3) and lap (..., elec).
+    """
+    grad = jnp.einsum('...iej,...ei->...ej', C_blk[..., 1:4], Minv)
+    lap = jnp.einsum('...ie,...ei->...e', C_blk[..., 4], Minv)
+    return grad, lap
+
+
 def _spin_block(C_blk: jnp.ndarray, ns_steps: int):
     """C_blk: (n, n, 5) one-spin block (orbital, electron, component)."""
     D = C_blk[..., 0]                                    # (orb, elec)
@@ -39,8 +57,7 @@ def _spin_block(C_blk: jnp.ndarray, ns_steps: int):
     M = jnp.linalg.inv(D)                                # (elec, orb)
     if ns_steps:
         M = refine_inverse(D, M, ns_steps)
-    grad = jnp.einsum('iej,ei->ej', C_blk[..., 1:4], M)  # (elec, 3)
-    lap = jnp.einsum('ie,ei->e', C_blk[..., 4], M)       # (elec,)
+    grad, lap = ratios_from_inverse(C_blk, M)
     return sign, logdet, grad, lap, M
 
 

@@ -31,12 +31,15 @@ from .basis import BasisSet
 
 
 class MOGrid(NamedTuple):
+    """Regular-grid tabulation of all MOs (paper §IV's spline table)."""
+
     values: jnp.ndarray     # (n_orb, nx, ny, nz) f32 — tabulated MO values
     origin: jnp.ndarray     # (3,)
     inv_h: jnp.ndarray      # (3,) 1/spacing
 
     @property
     def memory_bytes(self) -> int:
+        """Size of the tabulated grid in bytes."""
         return self.values.size * self.values.dtype.itemsize
 
 
@@ -107,22 +110,22 @@ def interp_mo_block(grid: MOGrid, r_elec: jnp.ndarray) -> jnp.ndarray:
     w, dw, d2w = _cr_weights(t)                                 # (n_e, 3, 4)
     ih = grid.inv_h
 
-    def one_electron(i0_e, w_e, dw_e, d2w_e):
+    def _one_electron(i0_e, w_e, dw_e, d2w_e):
         block = jax.lax.dynamic_slice(
             grid.values, (0, i0_e[0], i0_e[1], i0_e[2]),
             (grid.values.shape[0], 4, 4, 4))                    # (orb,4,4,4)
 
-        def contract(wx, wy, wz):
+        def _contract(wx, wy, wz):
             return jnp.einsum('oxyz,x,y,z->o', block, wx, wy, wz)
 
-        val = contract(w_e[0], w_e[1], w_e[2])
-        gx = contract(dw_e[0], w_e[1], w_e[2]) * ih[0]
-        gy = contract(w_e[0], dw_e[1], w_e[2]) * ih[1]
-        gz = contract(w_e[0], w_e[1], dw_e[2]) * ih[2]
-        lap = (contract(d2w_e[0], w_e[1], w_e[2]) * ih[0] ** 2
-               + contract(w_e[0], d2w_e[1], w_e[2]) * ih[1] ** 2
-               + contract(w_e[0], w_e[1], d2w_e[2]) * ih[2] ** 2)
+        val = _contract(w_e[0], w_e[1], w_e[2])
+        gx = _contract(dw_e[0], w_e[1], w_e[2]) * ih[0]
+        gy = _contract(w_e[0], dw_e[1], w_e[2]) * ih[1]
+        gz = _contract(w_e[0], w_e[1], dw_e[2]) * ih[2]
+        lap = (_contract(d2w_e[0], w_e[1], w_e[2]) * ih[0] ** 2
+               + _contract(w_e[0], d2w_e[1], w_e[2]) * ih[1] ** 2
+               + _contract(w_e[0], w_e[1], d2w_e[2]) * ih[2] ** 2)
         return jnp.stack([val, gx, gy, gz, lap], axis=-1)       # (orb, 5)
 
-    C = jax.vmap(one_electron)(i0, w, dw, d2w)                  # (n_e, orb, 5)
+    C = jax.vmap(_one_electron)(i0, w, dw, d2w)                  # (n_e, orb, 5)
     return jnp.transpose(C, (1, 0, 2))                          # (orb, n_e, 5)

@@ -25,6 +25,8 @@ from .wavefunction import (WavefunctionConfig, WavefunctionParams, psi_state,
 
 
 class WalkerEnsemble(NamedTuple):
+    """Walker-major all-electron ensemble (driver-sharded leading axis)."""
+
     r: jnp.ndarray          # (W, n_e, 3)
     log_psi: jnp.ndarray    # (W,)
     sign: jnp.ndarray       # (W,)
@@ -64,18 +66,28 @@ def evaluate_ensemble(cfg, params, r):
 _evaluate = evaluate_ensemble      # deprecated alias (one release)
 
 
-def init_walkers(cfg: WavefunctionConfig, params: WavefunctionParams,
-                 key: jax.Array, n_walkers: int,
-                 spread: float = 1.5) -> WalkerEnsemble:
-    """Electrons scattered around (charge-weighted) random nuclei."""
-    n_e = cfg.n_elec
+def sample_positions(params: WavefunctionParams, key: jax.Array,
+                     n_walkers: int, n_e: int,
+                     spread: float = 1.5) -> jnp.ndarray:
+    """Electrons scattered around (charge-weighted) random nuclei.
+
+    The cold-start position distribution shared by every propagator
+    (VMC, DMC, single-electron-move).  Returns (n_walkers, n_e, 3).
+    """
     ka, kb = jax.random.split(key)
     n_at = params.coords.shape[0]
     probs = params.charges / jnp.sum(params.charges)
     at = jax.random.choice(ka, n_at, (n_walkers, n_e), p=probs)
     centers = params.coords[at]
-    r = centers + spread * jax.random.normal(kb, (n_walkers, n_e, 3),
-                                             dtype=params.coords.dtype)
+    return centers + spread * jax.random.normal(kb, (n_walkers, n_e, 3),
+                                                dtype=params.coords.dtype)
+
+
+def init_walkers(cfg: WavefunctionConfig, params: WavefunctionParams,
+                 key: jax.Array, n_walkers: int,
+                 spread: float = 1.5) -> WalkerEnsemble:
+    """Cold-start ensemble: sampled positions, fully evaluated."""
+    r = sample_positions(params, key, n_walkers, cfg.n_elec, spread)
     ens, _ = evaluate_ensemble(cfg, params, r)
     return ens
 
@@ -94,12 +106,12 @@ def propose_diffusion(cfg, params, ens: WalkerEnsemble, key, pop: Population,
     index) make proposals identical under any walker-axis sharding.
     Returns (proposed ensemble, Metropolis log-ratio, per-walker uniforms).
     """
-    def draw(k):
+    def _draw(k):
         k_eta, k_u = jax.random.split(k)
         eta = jax.random.normal(k_eta, ens.r.shape[1:], ens.r.dtype)
         return eta, jax.random.uniform(k_u, ())
 
-    eta, u = jax.vmap(draw)(pop.walker_keys(key, ens.r.shape[0]))
+    eta, u = jax.vmap(_draw)(pop.walker_keys(key, ens.r.shape[0]))
     r_new = ens.r + tau * ens.drift + jnp.sqrt(tau) * eta
     new, _ = evaluate_ensemble(cfg, params, r_new)
     log_ratio = (2.0 * (new.log_psi - ens.log_psi)
@@ -118,6 +130,7 @@ class VMCPropagator:
         self.cfg, self.tau, self.spread = cfg, float(tau), float(spread)
 
     def init(self, params, key, n_walkers: int, walkers=None):
+        """Cold start (sampled positions) or reservoir restart."""
         if walkers is not None:
             return restart_ensemble(
                 walkers, n_walkers,
@@ -125,6 +138,7 @@ class VMCPropagator:
         return init_walkers(self.cfg, params, key, n_walkers, self.spread)
 
     def propagate(self, params, ens: WalkerEnsemble, key, pop: Population):
+        """One all-electron drift-diffusion Metropolis generation."""
         new, log_ratio, u = propose_diffusion(self.cfg, params, ens, key,
                                               pop, self.tau)
         accept = jnp.log(u) < log_ratio
@@ -135,6 +149,7 @@ class VMCPropagator:
 
     def block_stats(self, params, ens: WalkerEnsemble, outs,
                     pop: Population) -> DriverStats:
+        """Reduce the scanned per-step outputs into one BlockStats."""
         e, e2, acc = outs                       # (steps,) global per-step means
         # sparsity/energy split from the final configuration (cheap,
         # representative — same choice as the legacy vmc_block)
@@ -197,8 +212,8 @@ def make_vmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
                   stacklevel=2)
     drv = _cached_driver(cfg, steps, tau)
 
-    def run(params, ens, key):
+    def _run(params, ens, key):
         st, stats = drv.run_block(params, ens, key)
         return st, _legacy_stats(stats)
 
-    return run
+    return _run

@@ -42,9 +42,14 @@ class WavefunctionConfig:
     #                                calls; 0 -> auto per backend (128 on
     #                                TPU, 2048 on CPU/interpret — see
     #                                kernels.sparse_mo.ops.ensemble_tiles)
+    sem_refresh: int = 8           # single-electron-move propagator: full
+    #                                slater_state recompute every this many
+    #                                sweeps; Newton–Schulz corrector between
+    #                                refreshes bounds fp32 drift (DESIGN §6)
 
     @property
     def n_elec(self) -> int:
+        """Total electron count (n_up + n_dn)."""
         return self.n_up + self.n_dn
 
 
@@ -58,6 +63,8 @@ class WavefunctionParams(NamedTuple):
 
 
 class PsiState(NamedTuple):
+    """Per-walker evaluation summary: value, drift, local energy."""
+
     sign: jnp.ndarray        # ()
     log_psi: jnp.ndarray     # () log|Psi_T|
     drift: jnp.ndarray       # (n_e, 3) grad log Psi_T
@@ -218,14 +225,14 @@ def local_energy_autodiff(cfg: WavefunctionConfig,
     """Autodiff oracle: E_L from grad/laplacian of log|Psi| (tests only)."""
     flat = r_elec.reshape(-1)
 
-    def f(x):
+    def _f(x):
         return log_psi(cfg, params, x.reshape(r_elec.shape))[1]
 
-    grad = jax.grad(f)(flat)
+    grad = jax.grad(_f)(flat)
     n = flat.shape[0]
     eye = jnp.eye(n, dtype=flat.dtype)
     hdiag = jax.vmap(
-        lambda v: jax.jvp(jax.grad(f), (flat,), (v,))[1] @ v)(eye)
+        lambda v: jax.jvp(jax.grad(_f), (flat,), (v,))[1] @ v)(eye)
     lap_log = jnp.sum(hdiag)
     e_kin = -0.5 * (lap_log + jnp.sum(grad * grad))
     return e_kin + potential_energy(r_elec, params.coords, params.charges)

@@ -1,0 +1,90 @@
+"""Batched rank-1 Sherman–Morrison update Pallas kernel (walker-tiled).
+
+The single-electron-move hot path applies, per accepted walker,
+
+    Minv <- Minv - outer(u, row);   Minv[j] <- row
+
+over the whole ``(W, n, n)`` ensemble — an outer-product axpy plus one row
+replacement, O(W n^2) memory-bound work repeated n_e times per sweep.  XLA
+lowers the naive jnp version to several passes over the ensemble (outer
+product, subtract, dynamic row scatter, accept select); the kernel fuses
+all of it into one read + one write of each walker tile.
+
+Tile layout: the grid runs over walker tiles, each grid step owning a
+``(tile_w, n, n)`` block of ``Minv`` (both trailing axes padded to the f32
+(8, 128) VMEM tile by ``ops.sem_rank1_update`` — the last two dims of a
+3-D block are the constrained ones, the leading walker dim is free).  ``u``
+and ``row`` ride along as ``(tile_w, n)`` panels and broadcast against the
+block in registers; the row replacement is a lane-wise select on a
+broadcasted electron-index iota (no dynamic-slice store), and the
+per-walker accept bit predicates the whole update as a select against the
+resident input tile.  The electron index ``j`` is scalar-prefetched: it is
+the same for every walker, and prefetching keeps it out of the tiled
+operand path.
+
+Walker tiles are independent, so the single grid dimension is declared
+``parallel`` on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(j_ref, minv_ref, u_ref, row_ref, acc_ref, out_ref):
+    j = j_ref[0]
+    minv = minv_ref[...]                               # (tile_w, n, n)
+    row = row_ref[...]                                 # (tile_w, n)
+    upd = minv - u_ref[...][:, :, None] * row[:, None, :]
+    elec = jax.lax.broadcasted_iota(jnp.int32, upd.shape, 1)
+    upd = jnp.where(elec == j, row[:, None, :], upd)
+    keep = acc_ref[...][:, 0] == 0                     # (tile_w,)
+    out_ref[...] = jnp.where(keep[:, None, None], minv, upd)
+
+
+@functools.partial(jax.jit, static_argnames=('tile_w', 'interpret'))
+def sem_update_matmul(minv: jnp.ndarray, u: jnp.ndarray, row: jnp.ndarray,
+                      accept: jnp.ndarray, j: jnp.ndarray, *,
+                      tile_w: int = 8, interpret: bool = True):
+    """Raw kernel dispatch on pre-padded operands.
+
+    Args:
+      minv: (W, n, n) f32, W a multiple of ``tile_w``, n padded to the
+        f32 VMEM tile (last dim 128-multiple; see ops.sem_rank1_update).
+      u, row: (W, n) f32.
+      accept: (W, 1) int32 (0 = reject); padding walkers pass 0.
+      j: (1,) int32 electron row index (scalar-prefetched).
+      interpret: Python interpreter backend (CPU validation); False targets
+        real TPU hardware.
+
+    Returns the updated (W, n, n) f32 inverses.
+    """
+    W, n, _ = minv.shape
+    assert W % tile_w == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(W // tile_w,),
+        in_specs=[
+            pl.BlockSpec((tile_w, n, n), lambda w, jr: (w, 0, 0)),
+            pl.BlockSpec((tile_w, n), lambda w, jr: (w, 0)),
+            pl.BlockSpec((tile_w, n), lambda w, jr: (w, 0)),
+            pl.BlockSpec((tile_w, 1), lambda w, jr: (w, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_w, n, n), lambda w, jr: (w, 0, 0)),
+    )
+    kwargs = {}
+    if not interpret:
+        # walker tiles write disjoint output blocks: fully parallel
+        kwargs['compiler_params'] = pltpu.TPUCompilerParams(
+            dimension_semantics=('parallel',))
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((W, n, n), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(j, minv, u, row, accept)

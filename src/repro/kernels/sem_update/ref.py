@@ -1,0 +1,39 @@
+"""Pure-jnp reference for the batched Sherman–Morrison update kernel.
+
+One accepted single-electron move replaces row ``j`` of the Slater matrix's
+transpose-inverse ``Minv`` and applies a rank-1 correction to every other
+row (Sherman–Morrison; ``core.slater.det_ratio_one_electron`` is the
+unbatched original).  This module is the semantics oracle the Pallas kernel
+(``kernel.py``) is tested against, and the default CPU path of the
+single-electron-move propagator.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sem_update_ref(minv: jnp.ndarray, u: jnp.ndarray, row: jnp.ndarray,
+                   accept: jnp.ndarray, j) -> jnp.ndarray:
+    """Batched rank-1 inverse update + row replacement, accepted walkers only.
+
+    For each walker w with ``accept[w]``:
+
+        minv[w] <- minv[w] - outer(u[w], row[w]);  minv[w, j] <- row[w]
+
+    where ``u = minv @ phi_new`` and ``row = minv[j] / ratio`` (the
+    Sherman–Morrison update for replacing column ``j`` of the Slater
+    matrix).  Rejected walkers pass through untouched — NaN/Inf in their
+    ``row`` (from a near-zero ratio) cannot leak through the select.
+
+    Args:
+      minv: (W, n, n) running inverses, electron-major rows.
+      u: (W, n) ``minv @ phi_new``.
+      row: (W, n) new row ``j`` (already divided by the ratio).
+      accept: (W,) bool Metropolis outcome per walker.
+      j: electron row index (python int or traced scalar).
+
+    Returns the updated (W, n, n) inverses.
+    """
+    upd = minv - u[:, :, None] * row[:, None, :]
+    upd = upd.at[:, j, :].set(row)
+    return jnp.where(accept[:, None, None], upd, minv)

@@ -4,7 +4,9 @@
 
 Each worker thread drives one generic ``BlockSampler`` — a jit'd
 ``EnsembleDriver`` block loop over the method's ``Propagator`` plug-in
-(VMC/DMC) — over its private walker population.  ``--shards N`` sharding:
+(``--method vmc|dmc|sem-vmc``; ``sem-vmc`` is the Sherman–Morrison
+single-electron-move sampler, DESIGN.md §6) — over its private walker
+population.  ``--shards N`` sharding:
 each worker's walker axis is distributed over N local devices through the
 driver's ``walkers`` mesh — bit-identical trajectories to --shards 1 for
 power-of-two walkers-per-shard, fp32-reduction-tolerance stats otherwise
@@ -41,11 +43,18 @@ def build_system(name: str, method: str):
 
 def build_propagator(method: str, cfg, tau: float, e_trial=None,
                      equil_steps: int = 100):
-    """CLI-level method selection — the one place VMC vs DMC is decided."""
+    """CLI-level method selection — the one place the method is decided.
+
+    ``sem-vmc`` is the single-electron-move sampler: for it ``tau`` is the
+    per-electron Gaussian proposal width, not a drift-diffusion time step.
+    """
     from repro.core.dmc import DMCPropagator
+    from repro.core.sem import SEMVMCPropagator
     from repro.core.vmc import VMCPropagator
     if method == 'vmc':
         return VMCPropagator(cfg, tau=tau)
+    if method == 'sem-vmc':
+        return SEMVMCPropagator(cfg, step_size=tau)
     e0 = e_trial if e_trial is not None else -0.5 * cfg.n_elec
     return DMCPropagator(cfg, e_trial=e0, tau=tau, equil_steps=equil_steps)
 
@@ -54,7 +63,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument('--system', default='h2',
                     help='h|h2|heh+|water|smallest|b-strand|...')
-    ap.add_argument('--method', choices=('vmc', 'dmc'), default='vmc')
+    ap.add_argument('--method', choices=('vmc', 'dmc', 'sem-vmc'),
+                    default='vmc')
     ap.add_argument('--workers', type=int, default=2)
     ap.add_argument('--walkers', type=int, default=32,
                     help='walkers per worker (paper: 10-100/core)')
@@ -74,7 +84,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg, params = build_system(args.system, args.method)
-    tau = args.tau or (0.3 if args.method == 'vmc' else 0.02)
+    tau = args.tau or (0.02 if args.method == 'dmc' else 0.3)
     prop = build_propagator(args.method, cfg, tau, e_trial=args.e_trial)
     mesh = None
     if args.shards > 1:

@@ -1,3 +1,4 @@
+"""Partitioning: model/parameter sharding rules + the QMC walker mesh."""
 from repro.sharding.ensemble import walkers_mesh
 from repro.sharding.partition import (LOGICAL_RULES, named_sharding_tree,
                                       opt_state_specs, partition_spec_tree)

@@ -51,6 +51,7 @@ def _mesh_axes(mesh: Mesh, logical: Optional[str], cfg: ModelConfig):
 
 
 def spec_to_pspec(s: ParamSpec, mesh: Mesh, cfg: ModelConfig) -> P:
+    """One logical ParamSpec -> PartitionSpec on this mesh."""
     return P(*(_mesh_axes(mesh, ax, cfg) for ax in s.axes))
 
 
@@ -61,6 +62,7 @@ def partition_spec_tree(cfg: ModelConfig, mesh: Mesh):
 
 
 def named_sharding_tree(cfg: ModelConfig, mesh: Mesh):
+    """NamedSharding tree matching param_specs(cfg) on this mesh."""
     return jax.tree.map(lambda p: NamedSharding(mesh, p),
                         partition_spec_tree(cfg, mesh))
 
@@ -84,7 +86,7 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_tree):
     dp = tuple(a for a in ('pod', 'data') if a in mesh.axis_names)
     dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
 
-    def one(path_leaf):
+    def _one(path_leaf):
         path, leaf = path_leaf
         name = path[-1] if path else ''
         shape = leaf.shape
@@ -106,7 +108,7 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_tree):
         return P(*spec)
 
     paths = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
-    flat = [one(((tuple(str(getattr(k, 'key', k)) for k in path)), leaf))
+    flat = [_one(((tuple(str(getattr(k, 'key', k)) for k in path)), leaf))
             for path, leaf in paths]
     treedef = jax.tree.structure(cache_tree)
     return jax.tree.unflatten(treedef, flat)
@@ -123,7 +125,7 @@ def opt_state_specs(param_pspecs, abstract_params, mesh: Mesh):
         return param_pspecs
     dsize = mesh.shape['data']
 
-    def one(pspec: P, aval):
+    def _one(pspec: P, aval):
         spec = list(pspec) + [None] * (len(aval.shape) - len(pspec))
         for i, (ax, dim) in enumerate(zip(spec, aval.shape)):
             if ax is None and dim % dsize == 0 and dim >= dsize:
@@ -131,4 +133,4 @@ def opt_state_specs(param_pspecs, abstract_params, mesh: Mesh):
                 return P(*spec)
         return pspec
 
-    return jax.tree.map(one, param_pspecs, abstract_params)
+    return jax.tree.map(_one, param_pspecs, abstract_params)
