@@ -12,7 +12,9 @@ unified-driver block loop, single-device vs walker-mesh-sharded (run under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the sharded
 rows); Table VIII compares single-electron-move sweeps (Sherman–Morrison
 inverse updates) against per-move full recompute and the all-electron
-propagator.  TPU-side roofline numbers live in experiments/roofline +
+propagator; Table IX is the backend parallel-efficiency table (thread vs
+process workers, steady-state blocks/s from stored block timestamps).
+TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
@@ -34,7 +36,7 @@ from benchmarks import tables as T
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII')
+    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII,IX')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -43,7 +45,7 @@ def main(argv=None) -> int:
 
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
            'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
-           'VIII': T.table_sem}
+           'VIII': T.table_sem, 'IX': T.table_runtime}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

@@ -1,0 +1,38 @@
+"""Benchmark samplers, importable without jax.
+
+Kept out of ``benchmarks.tables`` (which imports jax at module level) so
+ProcessBackend worker children — which import the sampler's module to
+unpickle it — boot in ~0.3 s instead of paying the multi-second jax
+import for a sampler that never touches it.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.runtime.blocks import BlockAccumulator
+
+
+class RuntimeBenchSampler:
+    """Sleep-bound fake sampler for backend-scaling runs.
+
+    Models the GIL-free XLA compute of a real worker with a fixed-cost
+    sub-block; deterministic Gaussian E_L around a known mean.
+    """
+
+    def __init__(self, true_energy=-3.0, sigma=0.5, delay=0.01):
+        self.mu, self.sigma, self.delay = true_energy, sigma, delay
+
+    def init_state(self, worker_id, seed, walkers=None):
+        return {'rng': np.random.default_rng([seed, worker_id])}
+
+    def set_e_trial(self, state, e_trial):
+        return state
+
+    def run_subblock(self, state, step):
+        time.sleep(self.delay)
+        e = state['rng'].normal(self.mu, self.sigma, size=64)
+        acc = BlockAccumulator(weight=float(e.size), e_mean=float(e.mean()),
+                               e2_mean=float((e ** 2).mean()))
+        return state, acc, state['rng'].normal(size=(8, 2, 3)), e[:8]

@@ -211,11 +211,12 @@ def table5(quick=True):
     base = None
     rows = []
     for n in counts:
-        cfg = rt.RunConfig(n_workers=n, wall_clock_limit=duration,
-                           poll_interval=0.05, subblocks_per_block=2)
+        ctl = rt.RunControl(wall_clock_limit=duration,
+                            poll_interval=0.05, subblocks_per_block=2)
         # sleep-bound fake sampler: models the GIL-free XLA compute of a
         # real worker so thread-level scaling is measurable on one core
-        mgr = rt.QMCManager(FakeSampler(delay=0.01), f'tab5-{n}', cfg)
+        mgr = rt.QMCManager(FakeSampler(delay=0.01), f'tab5-{n}', ctl,
+                            backend=rt.ThreadBackend(n))
         t0 = time.monotonic()
         avg = mgr.run()
         wall = time.monotonic() - t0
@@ -227,6 +228,56 @@ def table5(quick=True):
                          blocks_per_s=round(rate, 1),
                          speedup=round(rate / base, 2),
                          efficiency=round(rate / base / n, 3)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IX: parallel efficiency of the runtime backends (thread vs process)
+# ---------------------------------------------------------------------------
+def table_runtime(quick=True):
+    """Paper Table IV/V-style parallel efficiency of the block runtime.
+
+    Block throughput vs worker count for the thread and process execution
+    substrates (same manager, same forwarder tree, same block target).
+    The rate is *steady-state*: computed from the stored block timestamps
+    (first to last), so process-spawn cold start — interpreter boot +
+    sampler unpickle — is excluded.  ``speedup``/``efficiency`` are
+    relative to each backend's own 1-worker rate; ``vs_thread`` compares
+    the substrates at equal worker count (the process backend pays
+    pickling + queue hops — the paper's compressed-transfer path).
+    """
+    from benchmarks.samplers import RuntimeBenchSampler
+    from repro.runtime import QMCManager, RunControl, make_backend
+
+    per_worker_blocks = 20 if quick else 60
+    counts = [1, 2, 4] if quick else [1, 2, 4, 8, 16]
+    rows = []
+    thread_rates = {}
+    for backend_name in ('thread', 'process'):
+        base = None
+        for n in counts:
+            target = per_worker_blocks * n
+            ctl = RunControl(max_blocks=target, poll_interval=0.05,
+                             subblocks_per_block=2)
+            mgr = QMCManager(RuntimeBenchSampler(delay=0.01),
+                             f'tab9-{backend_name}-{n}', ctl,
+                             backend=make_backend(backend_name, n))
+            avg = mgr.run()
+            ts = sorted(b.timestamp
+                        for b in mgr.db.blocks(f'tab9-{backend_name}-{n}'))
+            span = ts[-1] - ts[0]
+            rate = (len(ts) - 1) / span if span > 0 else float('nan')
+            if base is None:
+                base = rate
+            if backend_name == 'thread':
+                thread_rates[n] = rate
+            row = dict(table='IX', backend=backend_name, workers=n,
+                       blocks=avg.n_blocks, blocks_per_s=round(rate, 1),
+                       speedup=round(rate / base, 2),
+                       efficiency=round(rate / base / n, 3))
+            if backend_name == 'process' and thread_rates.get(n):
+                row['vs_thread'] = round(rate / thread_rates[n], 2)
+            rows.append(row)
     return rows
 
 

@@ -2,6 +2,9 @@
 runtime (manager -> data server -> forwarder tree -> workers), exercising
 every §V mechanism of the paper on a real molecule:
 
+  * one declarative ``RunSpec`` compiled by ``build_run`` (swap
+    ``backend='thread'`` for ``'process'`` or ``'sim'`` to change the
+    execution substrate without touching anything else);
   * a few hundred droppable block averages accumulated in the sqlite DB;
   * a worker hard-crash mid-run (its in-flight block is simply absent);
   * an elastic worker joining mid-run;
@@ -15,28 +18,19 @@ import tempfile
 import time
 from pathlib import Path
 
-import numpy as np
-
-from repro.core.dmc import DMCPropagator
-from repro.runtime import (QMCManager, ResultDatabase, RunConfig,
-                           critical_data_key)
-from repro.runtime.samplers import BlockSampler
-from repro.systems.molecule import build_wavefunction, h2
+from repro.launch.spec import RunSpec, build_run
 
 
 def main():
-    cfg, params = build_wavefunction(*h2())
-    prop = DMCPropagator(cfg, e_trial=-1.17, tau=0.02, equil_steps=60)
-    sampler = BlockSampler(prop, params, n_walkers=24, steps=25)
-    run_key = critical_data_key(system='h2', tau=0.02,
-                                mo=np.asarray(params.mo))
     db_path = Path(tempfile.mkdtemp()) / 'h2_dmc.sqlite'
-    db = ResultDatabase(str(db_path))
+    spec = RunSpec(system='h2', method='dmc', e_trial=-1.17,
+                   equil_steps=60, n_walkers=24, steps=25,
+                   backend='thread', n_workers=4, subblocks_per_block=2,
+                   max_blocks=200, poll_interval=0.1, db=str(db_path))
 
     print(f'== run 1: 4 workers, target 200 blocks  (db: {db_path})')
-    rc = RunConfig(n_workers=4, max_blocks=200, poll_interval=0.1,
-                   subblocks_per_block=2, e_trial_feedback=True)
-    mgr = QMCManager(sampler, run_key, rc, db=db)
+    run = build_run(spec)
+    mgr = run.manager
     mgr.start()
 
     time.sleep(15)
@@ -48,17 +42,15 @@ def main():
 
     avg1 = mgr.run()
     print(f'   run 1 done: {avg1}')
-    assert not mgr.worker_errors(), mgr.worker_errors()
+    assert not run.worker_errors(), run.worker_errors()
 
     print('== run 2: restart from the walker reservoir, +100 blocks')
-    rc2 = RunConfig(n_workers=2, max_blocks=avg1.n_blocks + 100,
-                    poll_interval=0.1, subblocks_per_block=2,
-                    e_trial_feedback=True)
-    mgr2 = QMCManager(sampler, run_key, rc2, db=db)
-    mgr2.start()
-    restarted = sum(w.init_walkers is not None for w in mgr2.workers)
+    run2 = build_run(spec.replace(n_workers=2,
+                                  max_blocks=avg1.n_blocks + 100))
+    run2.manager.start()
+    restarted = sum(w.init_walkers is not None for w in run2.manager.workers)
     print(f'   {restarted}/2 workers seeded from the checkpoint reservoir')
-    avg2 = mgr2.run()
+    avg2 = run2.manager.run()
     print(f'   run 2 done: {avg2}')
     print(f'== final: E = {avg2.energy:+.5f} +/- {avg2.error:.5f} '
           f'(exact H2: -1.1745; {avg2.n_blocks} blocks survive crashes, '

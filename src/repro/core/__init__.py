@@ -6,7 +6,9 @@ kernels are under ``repro.kernels`` and the fault-tolerant runtime under
 ``repro.runtime``.
 """
 from repro.core.driver import (BlockStats, EnsembleDriver, Population,
-                               Propagator, WALKER_AXIS, restart_ensemble)
+                               Propagator, WALKER_AXIS, make_propagator,
+                               register_method, restart_ensemble)
 
 __all__ = ['BlockStats', 'EnsembleDriver', 'Population', 'Propagator',
-           'WALKER_AXIS', 'restart_ensemble']
+           'WALKER_AXIS', 'make_propagator', 'register_method',
+           'restart_ensemble']

@@ -17,23 +17,21 @@ feedback); the jit'd ``lax.scan`` block loop and walker-axis sharding are
 the generic ``driver.EnsembleDriver``.  Under a sharded driver the
 reconfiguration is *global*: weights are all-gathered so the resampling is
 identical to the single-device population (walker exchange is the one
-collective DMC fundamentally needs).  ``dmc_block`` / ``make_dmc_block``
-remain as deprecated wrappers for one release (DESIGN.md §5).
+collective DMC fundamentally needs) — DESIGN.md §5.
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .driver import (BlockStats as DriverStats, EnsembleDriver, Population,
-                     merge_accepted, restart_ensemble)
+                     merge_accepted, register_method, restart_ensemble)
 from .reconfig import reconfigure, global_weight_update
 from .vmc import (VMCPropagator, WalkerEnsemble, evaluate_ensemble,
                   init_walkers, propose_diffusion)
-from .wavefunction import WavefunctionConfig, WavefunctionParams
+from .wavefunction import WavefunctionConfig
 
 
 class DMCState(NamedTuple):
@@ -42,16 +40,6 @@ class DMCState(NamedTuple):
     ens: WalkerEnsemble
     log_w_hist: jnp.ndarray    # (window,) trailing log population weights
     e_trial: jnp.ndarray       # () E_T reference energy
-
-
-class DMCBlockStats(NamedTuple):
-    """Legacy DMC block stats, kept for the deprecated ``dmc_block`` API."""
-    e_mean: jnp.ndarray        # global-weighted mixed estimator
-    e2_mean: jnp.ndarray
-    weight: jnp.ndarray        # sum of global weights (normalization)
-    accept: jnp.ndarray
-    pop_weight: jnp.ndarray    # mean population weight (E_T feedback signal)
-    sign_flips: jnp.ndarray    # fraction of proposed node crossings
 
 
 class DMCPropagator:
@@ -152,57 +140,17 @@ def update_e_trial(state: DMCState, e_estimate, damping: float = 0.5):
     return state._replace(e_trial=jnp.float32(et))
 
 
-def _legacy_stats(s: DriverStats) -> DMCBlockStats:
-    return DMCBlockStats(e_mean=s.e_mean, e2_mean=s.e2_mean, weight=s.weight,
-                         accept=s.aux['accept'],
-                         pop_weight=s.aux['pop_weight'],
-                         sign_flips=s.aux['sign_flips'])
-
-
-_DEPRECATION = ('%s is deprecated: build EnsembleDriver(DMCPropagator(cfg, '
-                'e_trial, tau), steps) (repro.core.driver) instead; this '
-                'wrapper is kept for one release.')
-
-# driver cache for the deprecated wrappers (see vmc._cached_driver): keyed
-# on cfg identity so repeated dmc_block calls reuse the compiled block.
-# The running E_T lives in DMCState, so e_trial=0.0 here is inert.
-_wrapper_drivers: dict = {}
-
-
-def _cached_driver(cfg, steps, tau):
-    key = ('dmc', id(cfg), steps, tau)
-    entry = _wrapper_drivers.get(key)
-    if entry is None or entry[0] is not cfg:
-        entry = (cfg, EnsembleDriver(DMCPropagator(cfg, e_trial=0.0,
-                                                   tau=tau),
-                                     steps, donate=False))
-        _wrapper_drivers[key] = entry
-    return entry[1]
-
-
 def dmc_step(cfg, params, state: DMCState, key, tau):
     """One DMC generation (single-device, unsharded)."""
     prop = DMCPropagator(cfg, e_trial=0.0, tau=tau)
     return prop.propagate(params, state, key, Population())
 
 
-def dmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
-              state: DMCState, key: jax.Array, steps: int, tau: float):
-    """Deprecated: one DMC block through the unified driver."""
-    warnings.warn(_DEPRECATION % 'dmc_block', DeprecationWarning,
-                  stacklevel=2)
-    st, stats = _cached_driver(cfg, steps, tau).run_block(params, state, key)
-    return st, _legacy_stats(stats)
+def _from_spec(cfg, tau, e_trial, equil_steps):
+    """RunSpec factory: default E_T is the crude -0.5 Ha/electron guess."""
+    e0 = e_trial if e_trial is not None else -0.5 * cfg.n_elec
+    return DMCPropagator(cfg, e_trial=e0, tau=tau,
+                         equil_steps=equil_steps)
 
 
-def make_dmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
-    """Deprecated: jit'd block runner with static config."""
-    warnings.warn(_DEPRECATION % 'make_dmc_block', DeprecationWarning,
-                  stacklevel=2)
-    drv = _cached_driver(cfg, steps, tau)
-
-    def _run(params, state, key):
-        st, stats = drv.run_block(params, state, key)
-        return st, _legacy_stats(stats)
-
-    return _run
+register_method('dmc', _from_spec, default_tau=0.02)

@@ -38,6 +38,47 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 WALKER_AXIS = 'walkers'
 
+# method-name -> propagator factory registry (populated by vmc/dmc/sem at
+# import time via register_method) — the single place a method string is
+# resolved, shared by launch.spec.RunSpec and the qmc_run CLI.
+_METHODS: dict = {}
+
+
+def register_method(name: str, factory, default_tau: float) -> None:
+    """Register a Propagator factory under a CLI/RunSpec method name.
+
+    ``factory(cfg, tau, e_trial, equil_steps) -> Propagator``; arguments a
+    method doesn't use are ignored by its factory.  ``default_tau`` is the
+    method's step-size default when a spec leaves ``tau`` at 0.
+    """
+    _METHODS[name] = (factory, float(default_tau))
+
+
+def _method_entry(method: str):
+    if method not in _METHODS:
+        from repro.core import dmc, sem, vmc  # noqa: F401  (registration)
+    if method not in _METHODS:
+        raise ValueError(f'unknown method {method!r} '
+                         f'(registered: {sorted(_METHODS)})')
+    return _METHODS[method]
+
+
+def method_default_tau(method: str) -> float:
+    """The registered step-size default for a method (tau=0 resolves
+    here — the single source, shared with RunSpec's run-key hashing)."""
+    return _method_entry(method)[1]
+
+
+def make_propagator(method: str, cfg, tau: float = 0.0,
+                    e_trial: float | None = None, equil_steps: int = 100):
+    """Build the Propagator for a registered method name.
+
+    The one place method strings are decided (imports the built-in method
+    modules lazily so their ``register_method`` calls have run).
+    """
+    factory, default_tau = _method_entry(method)
+    return factory(cfg, tau or default_tau, e_trial, equil_steps)
+
 
 class BlockStats(NamedTuple):
     """One block's sufficient statistics (typed — no stringly dicts).
@@ -174,6 +215,20 @@ class EnsembleDriver:
         self.axis_name = axis_name
         self.donate = donate
         self._compiled: dict = {}    # state treedef -> jit'd block fn
+
+    def __getstate__(self):
+        """Pickle support (ProcessBackend ships samplers to child
+        processes): the jit cache is dropped — children recompile — and a
+        device mesh refuses to travel (its devices belong to this
+        process; shard on the host instead)."""
+        if self.mesh is not None:
+            raise TypeError(
+                'EnsembleDriver with a device mesh cannot be pickled to '
+                'another process; use the thread backend for walker-mesh '
+                'sharding')
+        state = self.__dict__.copy()
+        state['_compiled'] = {}
+        return state
 
     # -- state construction / placement ---------------------------------
     def init(self, params, key, n_walkers: int, walkers=None):

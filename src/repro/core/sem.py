@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 
 from . import aos, slater
-from .driver import (BlockStats as DriverStats, Population, restart_ensemble)
+from .driver import (BlockStats as DriverStats, Population, register_method,
+                     restart_ensemble)
 from .jastrow import jastrow_delta_one_electron, jastrow_state
 from .hamiltonian import potential_energy
 from .vmc import evaluate_ensemble, sample_positions
@@ -289,3 +290,11 @@ class SEMVMCPropagator:
             aux=dict(accept=jnp.mean(acc),
                      ao_fill=pop.mean(st.ao_count.astype(jnp.float32)),
                      e_kin=pop.mean(st.e_kin), e_pot=pop.mean(st.e_pot)))
+
+
+# for sem-vmc the step size is a per-electron Gaussian proposal width,
+# not a drift-diffusion time step
+register_method('sem-vmc',
+                lambda cfg, tau, e_trial, equil_steps:
+                SEMVMCPropagator(cfg, step_size=tau),
+                default_tau=0.3)

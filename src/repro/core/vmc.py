@@ -6,20 +6,18 @@ sample; blocks are droppable/truncatable without bias).
 
 The method lives in ``VMCPropagator`` (init / propagate / block_stats);
 the block loop, jit, and walker-axis sharding are the generic
-``driver.EnsembleDriver``.  ``vmc_block`` / ``make_vmc_block`` remain as
-deprecated wrappers for one release (DESIGN.md §5).
+``driver.EnsembleDriver`` (DESIGN.md §5).
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from .driver import (BlockStats as DriverStats, EnsembleDriver, Population,
-                     merge_accepted, restart_ensemble)
+from .driver import (BlockStats as DriverStats, Population, merge_accepted,
+                     register_method, restart_ensemble)
 from .wavefunction import (WavefunctionConfig, WavefunctionParams, psi_state,
                            psi_state_batched)
 
@@ -32,20 +30,6 @@ class WalkerEnsemble(NamedTuple):
     sign: jnp.ndarray       # (W,)
     drift: jnp.ndarray      # (W, n_e, 3)
     e_loc: jnp.ndarray      # (W,)
-
-
-class BlockStats(NamedTuple):
-    """Legacy VMC block stats, kept for the deprecated ``vmc_block`` API.
-
-    New code reads ``driver.BlockStats`` (accept/ao_fill/e_kin/e_pot move
-    into its typed ``aux``)."""
-    e_mean: jnp.ndarray
-    e2_mean: jnp.ndarray
-    weight: jnp.ndarray       # total statistical weight (walker-steps)
-    accept: jnp.ndarray       # acceptance fraction
-    ao_fill: jnp.ndarray      # mean active-AO count per electron (sparsity)
-    e_kin: jnp.ndarray
-    e_pot: jnp.ndarray
 
 
 def evaluate_ensemble(cfg, params, r):
@@ -61,9 +45,6 @@ def evaluate_ensemble(cfg, params, r):
         st = jax.vmap(partial(psi_state, cfg, params))(r)
     return WalkerEnsemble(r=r, log_psi=st.log_psi, sign=st.sign,
                           drift=st.drift, e_loc=st.e_loc), st
-
-
-_evaluate = evaluate_ensemble      # deprecated alias (one release)
 
 
 def sample_positions(params: WavefunctionParams, key: jax.Array,
@@ -152,7 +133,7 @@ class VMCPropagator:
         """Reduce the scanned per-step outputs into one BlockStats."""
         e, e2, acc = outs                       # (steps,) global per-step means
         # sparsity/energy split from the final configuration (cheap,
-        # representative — same choice as the legacy vmc_block)
+        # representative)
         _, st = evaluate_ensemble(self.cfg, params, ens.r)
         w = jnp.float32(e.shape[0] * pop.size(ens.r))
         return DriverStats(
@@ -170,50 +151,7 @@ def vmc_step(cfg, params, ens: WalkerEnsemble, key, tau):
     return merge_accepted(new, ens, accept), accept
 
 
-def _legacy_stats(s: DriverStats) -> BlockStats:
-    return BlockStats(e_mean=s.e_mean, e2_mean=s.e2_mean, weight=s.weight,
-                      accept=s.aux['accept'], ao_fill=s.aux['ao_fill'],
-                      e_kin=s.aux['e_kin'], e_pot=s.aux['e_pot'])
-
-
-_DEPRECATION = ('%s is deprecated: build EnsembleDriver(VMCPropagator(cfg, '
-                'tau), steps) (repro.core.driver) instead; this wrapper is '
-                'kept for one release.')
-
-# driver cache for the deprecated wrappers: configs hold arrays (unhashable)
-# so key on identity and pin the cfg so the id can't be recycled — repeated
-# vmc_block calls must hit the driver's compiled block, not retrace it
-_wrapper_drivers: dict = {}
-
-
-def _cached_driver(cfg, steps, tau):
-    key = ('vmc', id(cfg), steps, tau)
-    entry = _wrapper_drivers.get(key)
-    if entry is None or entry[0] is not cfg:
-        entry = (cfg, EnsembleDriver(VMCPropagator(cfg, tau), steps,
-                                     donate=False))
-        _wrapper_drivers[key] = entry
-    return entry[1]
-
-
-def vmc_block(cfg: WavefunctionConfig, params: WavefunctionParams,
-              ens: WalkerEnsemble, key: jax.Array, steps: int,
-              tau: float):
-    """Deprecated: one VMC block through the unified driver."""
-    warnings.warn(_DEPRECATION % 'vmc_block', DeprecationWarning,
-                  stacklevel=2)
-    st, stats = _cached_driver(cfg, steps, tau).run_block(params, ens, key)
-    return st, _legacy_stats(stats)
-
-
-def make_vmc_block(cfg: WavefunctionConfig, steps: int, tau: float):
-    """Deprecated: jit'd block runner with static config."""
-    warnings.warn(_DEPRECATION % 'make_vmc_block', DeprecationWarning,
-                  stacklevel=2)
-    drv = _cached_driver(cfg, steps, tau)
-
-    def _run(params, ens, key):
-        st, stats = drv.run_block(params, ens, key)
-        return st, _legacy_stats(stats)
-
-    return _run
+register_method('vmc',
+                lambda cfg, tau, e_trial, equil_steps:
+                VMCPropagator(cfg, tau=tau),
+                default_tau=0.3)

@@ -2,69 +2,44 @@
 
     manager -> data server (sqlite DB) -> forwarder tree -> workers
 
-Each worker thread drives one generic ``BlockSampler`` — a jit'd
-``EnsembleDriver`` block loop over the method's ``Propagator`` plug-in
-(``--method vmc|dmc|sem-vmc``; ``sem-vmc`` is the Sherman–Morrison
-single-electron-move sampler, DESIGN.md §6) — over its private walker
-population.  ``--shards N`` sharding:
-each worker's walker axis is distributed over N local devices through the
-driver's ``walkers`` mesh — bit-identical trajectories to --shards 1 for
-power-of-two walkers-per-shard, fp32-reduction-tolerance stats otherwise
-(DESIGN.md §5).
-The database IS the checkpoint: re-running with the same --db resumes from
-the stored walker reservoir and keeps appending blocks under the same
-CRC-32 run key.
+A thin argparse front over the declarative ``launch.spec.RunSpec``: flags
+map one-to-one onto spec fields and ``build_run`` assembles the whole
+sampler / driver / manager stack.  ``--backend`` picks the execution
+substrate (paper §V: "all kinds of computational platforms"):
+
+* ``thread``  (default) — in-process worker threads (XLA releases the GIL);
+* ``process`` — one OS process per worker, pickled block packets pumped
+  into the forwarder tree (real isolation, true multi-core);
+* ``sim``     — deterministic simulated grid (``--sim-latency``,
+  ``--sim-drop``) for fault-tolerance drills.
+
+``--method vmc|dmc|sem-vmc`` selects the propagator plug-in; ``--shards N``
+shards each worker's walker axis over N local devices (DESIGN.md §5).  The
+database IS the checkpoint: re-running with the same --db resumes from the
+stored walker reservoir and keeps appending blocks under the same CRC-32
+run key — which hashes only critical data, so any backend/worker layout
+extends the same averages.
 
   PYTHONPATH=src python -m repro.launch.qmc_run --system h2 --method dmc \
-      --workers 4 --blocks 40 --db /tmp/h2.sqlite
+      --workers 4 --blocks 40 --backend process --db /tmp/h2.sqlite
 """
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
-from repro.runtime import (QMCManager, ResultDatabase, RunConfig,
-                           critical_data_key)
-from repro.runtime.samplers import BlockSampler
+from repro.launch.spec import RunSpec, SimGridConfig, build_run
 
 
-def build_system(name: str, method: str):
-    if name in ('h', 'h2', 'heh+', 'water'):
-        from repro.systems import molecule as mol
-        fn = {'h': mol.hydrogen, 'h2': mol.h2, 'heh+': mol.heh_plus,
-              'water': mol.water}[name]
-        cfg, params = mol.build_wavefunction(*fn())
-        return cfg, params
-    from repro.systems.bench import build_bench_wavefunction, paper_system
-    sysb = paper_system(name)
-    return build_bench_wavefunction(sysb, method='sparse')
-
-
-def build_propagator(method: str, cfg, tau: float, e_trial=None,
-                     equil_steps: int = 100):
-    """CLI-level method selection — the one place the method is decided.
-
-    ``sem-vmc`` is the single-electron-move sampler: for it ``tau`` is the
-    per-electron Gaussian proposal width, not a drift-diffusion time step.
-    """
-    from repro.core.dmc import DMCPropagator
-    from repro.core.sem import SEMVMCPropagator
-    from repro.core.vmc import VMCPropagator
-    if method == 'vmc':
-        return VMCPropagator(cfg, tau=tau)
-    if method == 'sem-vmc':
-        return SEMVMCPropagator(cfg, step_size=tau)
-    e0 = e_trial if e_trial is not None else -0.5 * cfg.n_elec
-    return DMCPropagator(cfg, e_trial=e0, tau=tau, equil_steps=equil_steps)
-
-
-def main(argv=None):
+def parse_spec(argv=None) -> RunSpec:
+    """CLI flags -> RunSpec (exposed separately for tests/tooling)."""
     ap = argparse.ArgumentParser()
     ap.add_argument('--system', default='h2',
                     help='h|h2|heh+|water|smallest|b-strand|...')
     ap.add_argument('--method', choices=('vmc', 'dmc', 'sem-vmc'),
                     default='vmc')
+    ap.add_argument('--backend', choices=('thread', 'process', 'sim'),
+                    default='thread',
+                    help='execution substrate for the workers')
     ap.add_argument('--workers', type=int, default=2)
     ap.add_argument('--walkers', type=int, default=32,
                     help='walkers per worker (paper: 10-100/core)')
@@ -81,32 +56,30 @@ def main(argv=None):
     ap.add_argument('--db', default=':memory:')
     ap.add_argument('--e-trial', type=float, default=None)
     ap.add_argument('--seed', type=int, default=0)
+    ap.add_argument('--sim-latency', type=float, default=0.0,
+                    help='[sim backend] seconds per worker->tree send')
+    ap.add_argument('--sim-drop', type=float, default=0.0,
+                    help='[sim backend] per-packet loss probability')
     args = ap.parse_args(argv)
+    return RunSpec(
+        system=args.system, method=args.method, tau=args.tau,
+        e_trial=args.e_trial, n_walkers=args.walkers, steps=args.steps,
+        shards=args.shards, backend=args.backend, n_workers=args.workers,
+        grid=SimGridConfig(latency=args.sim_latency, drop_rate=args.sim_drop,
+                           seed=args.seed),
+        max_blocks=args.blocks, target_error=args.target_error,
+        wall_clock_limit=args.wall_clock, db=args.db, seed=args.seed)
 
-    cfg, params = build_system(args.system, args.method)
-    tau = args.tau or (0.02 if args.method == 'dmc' else 0.3)
-    prop = build_propagator(args.method, cfg, tau, e_trial=args.e_trial)
-    mesh = None
-    if args.shards > 1:
-        from repro.sharding import walkers_mesh
-        mesh = walkers_mesh(args.shards)
-    sampler = BlockSampler(prop, params, n_walkers=args.walkers,
-                           steps=args.steps, mesh=mesh)
 
-    run_key = critical_data_key(
-        system=args.system, method=args.method, tau=tau,
-        mo=np.asarray(params.mo), coords=np.asarray(params.coords))
-    db = ResultDatabase(args.db)
-    rc = RunConfig(n_workers=args.workers, max_blocks=args.blocks,
-                   target_error=args.target_error,
-                   wall_clock_limit=args.wall_clock,
-                   e_trial_feedback=(args.method == 'dmc'))
-    mgr = QMCManager(sampler, run_key, rc, db=db, seed=args.seed)
-    print(f'run_key={run_key} system={args.system} method={args.method} '
-          f'workers={args.workers} x {args.walkers} walkers'
-          + (f' x {args.shards} shards' if args.shards > 1 else ''))
-    avg = mgr.run()
-    for err in mgr.worker_errors():
+def main(argv=None):
+    spec = parse_spec(argv)
+    run = build_run(spec)
+    print(f'run_key={run.run_key} system={spec.system} '
+          f'method={spec.method} backend={spec.backend}: '
+          f'{spec.n_workers} workers x {spec.n_walkers} walkers'
+          + (f' x {spec.shards} shards' if spec.shards > 1 else ''))
+    avg = run.run()
+    for err in run.worker_errors():
         print('WORKER ERROR:\n', err)
     print(avg)
     return avg

@@ -1,0 +1,163 @@
+"""Declarative run description: one ``RunSpec``, any execution substrate.
+
+The paper's §V framework is "universal, dynamic, fault-tolerant, and
+load-balanced ... adapted to all kinds of computational platforms".  This
+module is the single front door to that framework: a frozen ``RunSpec``
+captures *what* to run — system + wavefunction method + propagator choice +
+ensemble/shard layout + stopping criteria + resources — and
+``build_run(spec)`` compiles it against an interchangeable execution
+substrate (``--backend thread | process | sim``), assembling the
+sampler / driver / manager stack that used to be hand-wired across
+``qmc_run``, ``runtime.samplers`` and ``runtime.manager``:
+
+    spec = RunSpec(system='h2', method='dmc', n_workers=4, max_blocks=40,
+                   backend='process')
+    result = build_run(spec).run()
+
+Critical data (the CRC-32 run key) is derived from the spec's *estimator*
+fields only — method, tau, geometry, MOs — so the same physics on a
+different substrate, worker count, or block length lands in the same
+database rows and stays combinable (paper §V.C).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.runtime import (QMCManager, ResultDatabase, RunControl,
+                           SimGridConfig, critical_data_key, make_backend)
+from repro.runtime.samplers import BlockSampler
+from repro.systems import build_system
+
+# mirrors the built-in core.driver registrations; kept as a literal so
+# spec construction/validation stays jax-import-free (the registry itself
+# is consulted lazily for tau defaults and propagator construction)
+METHODS = ('vmc', 'dmc', 'sem-vmc')
+BACKEND_NAMES = ('thread', 'process', 'sim')
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """One declarative QMC run: physics + layout + stopping + resources.
+
+    Everything ``build_run`` needs; substrate-independent by construction.
+    ``tau=0`` means the method default (0.3 VMC / sem-vmc proposal width,
+    0.02 DMC).  ``grid`` only applies to ``backend='sim'``.
+    """
+
+    # physics: system + wavefunction + propagator choice
+    system: str = 'h2'
+    method: str = 'vmc'              # vmc | dmc | sem-vmc
+    tau: float = 0.0                 # 0 -> method default
+    e_trial: float | None = None     # DMC reference energy (None: guess)
+    equil_steps: int = 100           # DMC cold-start VMC equilibration
+
+    # ensemble / shard layout
+    n_walkers: int = 32              # walkers per worker (paper: 10-100)
+    steps: int = 50                  # MC generations per sub-block
+    shards: int = 1                  # local devices per worker ensemble
+
+    # resources (the platform axis)
+    backend: str = 'thread'          # thread | process | sim
+    n_workers: int = 2
+    subblocks_per_block: int = 4
+    grid: SimGridConfig = dataclasses.field(default_factory=SimGridConfig)
+
+    # stopping criteria
+    max_blocks: int = 20
+    target_error: float = 0.0        # Ha, stderr target (0: off)
+    wall_clock_limit: float = 0.0    # seconds (0: off)
+
+    # bookkeeping
+    db: str = ':memory:'
+    seed: int = 0
+    n_kept: int = 64                 # walker reservoir (checkpoint) size
+    poll_interval: float = 0.05
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f'unknown method {self.method!r} '
+                             f'(choose from {METHODS})')
+        if self.backend not in BACKEND_NAMES:
+            raise ValueError(f'unknown backend {self.backend!r} '
+                             f'(choose from {BACKEND_NAMES})')
+        if self.shards > 1 and self.backend == 'process':
+            raise ValueError(
+                'shards > 1 requires the thread or sim backend: a device '
+                'mesh cannot be shipped to worker processes')
+
+    def replace(self, **kw) -> 'RunSpec':
+        """Functional update (dataclasses.replace convenience)."""
+        return dataclasses.replace(self, **kw)
+
+    def resolved_tau(self) -> float:
+        """The effective step size (the method's registered default when
+        tau == 0) — this value, not the raw field, enters the run key."""
+        if self.tau:
+            return self.tau
+        from repro.core.driver import method_default_tau
+        return method_default_tau(self.method)
+
+
+@dataclasses.dataclass
+class QMCRun:
+    """A RunSpec compiled against a substrate: ready-to-run stack."""
+
+    spec: RunSpec
+    run_key: str
+    cfg: object                      # WavefunctionConfig
+    params: object                   # WavefunctionParams
+    sampler: BlockSampler
+    db: ResultDatabase
+    manager: QMCManager
+
+    @property
+    def backend(self):
+        return self.manager.backend
+
+    def run(self):
+        """Blocking run to completion -> final RunningAverage."""
+        return self.manager.run()
+
+    def worker_errors(self) -> list[str]:
+        return self.manager.worker_errors()
+
+
+def build_run(spec: RunSpec) -> QMCRun:
+    """Compile a RunSpec into a runnable manager/sampler/backend stack.
+
+    The assembly that was hand-wired in ``qmc_run``: resolve the system,
+    build the method's Propagator through the ``core.driver`` registry,
+    wrap it in the generic ``BlockSampler`` (walker-mesh-sharded when
+    ``shards > 1``), key the database by critical data, and stand up a
+    ``QMCManager`` on the requested backend.
+    """
+    from repro.core.driver import make_propagator
+
+    cfg, params = build_system(spec.system)
+    tau = spec.resolved_tau()
+    prop = make_propagator(spec.method, cfg, tau=tau, e_trial=spec.e_trial,
+                           equil_steps=spec.equil_steps)
+    mesh = None
+    if spec.shards > 1:
+        from repro.sharding import walkers_mesh
+        mesh = walkers_mesh(spec.shards)
+    sampler = BlockSampler(prop, params, n_walkers=spec.n_walkers,
+                           steps=spec.steps, mesh=mesh)
+
+    run_key = critical_data_key(
+        system=spec.system, method=spec.method, tau=tau,
+        mo=np.asarray(params.mo), coords=np.asarray(params.coords))
+    db = ResultDatabase(spec.db)
+    control = RunControl(max_blocks=spec.max_blocks,
+                         target_error=spec.target_error,
+                         wall_clock_limit=spec.wall_clock_limit,
+                         poll_interval=spec.poll_interval,
+                         subblocks_per_block=spec.subblocks_per_block,
+                         e_trial_feedback=(spec.method == 'dmc'))
+    backend = make_backend(spec.backend, spec.n_workers, grid=spec.grid)
+    mgr = QMCManager(sampler, run_key, control, db=db, seed=spec.seed,
+                     backend=backend, n_kept=spec.n_kept)
+    return QMCRun(spec=spec, run_key=run_key, cfg=cfg, params=params,
+                  sampler=sampler, db=db, manager=mgr)

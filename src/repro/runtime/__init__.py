@@ -18,19 +18,30 @@ samplers:
 
 On a real 1000-node TPU fleet each host runs one worker process per local
 device group; the forwarder tree spans hosts over TCP exactly as in the
-paper.  Here workers are threads (the samplers release the GIL inside XLA)
-and the tree is in-process queues — the protocol, fault paths, and unbiased-
-ness contract are what the tests exercise.
+paper.  Here the *execution substrate* is a pluggable ``ExecutorBackend``
+(runtime.backends): in-process threads (default; the samplers release the
+GIL inside XLA), separate OS processes shipping pickled block packets
+(real isolation, true multi-core), or a deterministic simulated grid with
+injectable latency / packet drop / node failure for chaos drills — the
+protocol, fault paths, and unbiasedness contract are identical across all
+three and are what the tests exercise.  The declarative front door is
+``launch.spec.RunSpec`` -> ``build_run``.
 """
+from repro.runtime.backends import (BACKENDS, ExecutorBackend,
+                                    ProcessBackend, SimGridBackend,
+                                    SimGridConfig, ThreadBackend,
+                                    WorkerHandle, make_backend)
 from repro.runtime.blocks import (BlockAccumulator, BlockResult,
                                   combine_blocks)
 from repro.runtime.database import ResultDatabase, critical_data_key
 from repro.runtime.forwarder import Forwarder, build_tree
-from repro.runtime.manager import QMCManager, RunConfig
+from repro.runtime.manager import QMCManager, RunConfig, RunControl
 from repro.runtime.reservoir import WalkerReservoir
 
 __all__ = [
-    'BlockAccumulator', 'BlockResult', 'combine_blocks', 'ResultDatabase',
-    'critical_data_key', 'Forwarder', 'build_tree', 'QMCManager',
-    'RunConfig', 'WalkerReservoir',
+    'BACKENDS', 'BlockAccumulator', 'BlockResult', 'combine_blocks',
+    'ExecutorBackend', 'Forwarder', 'ProcessBackend', 'QMCManager',
+    'ResultDatabase', 'RunConfig', 'RunControl', 'SimGridBackend',
+    'SimGridConfig', 'ThreadBackend', 'WalkerReservoir', 'WorkerHandle',
+    'build_tree', 'critical_data_key', 'make_backend',
 ]

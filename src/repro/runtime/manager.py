@@ -1,9 +1,10 @@
-"""Manager process (paper §V.D/fig. 3): orchestrates a fault-tolerant run.
+"""Manager (paper §V.D/fig. 3): orchestrates a fault-tolerant run.
 
 Responsibilities (paper-faithful):
   * spawn the data server (root forwarder + database) and the forwarder tree;
-  * start workers with collision-free RNG streams (fold_in on worker id)
-    and reservoir-sampled initial walkers;
+  * start workers — on any ``ExecutorBackend`` substrate (threads,
+    processes, simulated grid) — with collision-free RNG streams (fold_in
+    on worker id) and reservoir-sampled initial walkers;
   * periodically query the database, compute the running average, decide the
     running/stopping state (wall-clock limit, error-bar target, block count);
   * E_T feedback for DMC (between blocks — never inside one);
@@ -11,48 +12,111 @@ Responsibilities (paper-faithful):
     construction (its un-flushed block is simply absent from the database);
   * termination: signal all workers, wait for the truncated-block flush to
     drain through the tree, checkpoint the walker reservoir.
+
+The manager is written purely against the ``ExecutorBackend``/
+``WorkerHandle`` interface (runtime.backends), so elastic scaling and the
+termination walk are uniform across substrates.  The declarative front
+door is ``launch.spec.RunSpec`` -> ``build_run``; constructing a manager
+directly is the engine-level API (tests, embedding).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 import uuid
+import warnings
 
 import numpy as np
 
+from repro.runtime.backends import ExecutorBackend, ThreadBackend, \
+    WorkerHandle
 from repro.runtime.blocks import RunningAverage
 from repro.runtime.database import ResultDatabase
 from repro.runtime.forwarder import Forwarder, build_tree
-from repro.runtime.worker import Sampler, Worker
+from repro.runtime.worker import Sampler
+
+
+@dataclasses.dataclass(frozen=True)
+class RunControl:
+    """Substrate-agnostic run control: stopping criteria + polling.
+
+    Resource layout (worker count, process vs thread, grid pathologies)
+    lives on the ``ExecutorBackend``; tree shape lives on the manager.
+    """
+
+    max_blocks: int = 0              # stop after this many blocks (0: off)
+    target_error: float = 0.0        # stop when stderr below this (0: off)
+    wall_clock_limit: float = 0.0    # seconds (0: off)
+    poll_interval: float = 0.05
+    subblocks_per_block: int = 4
+    e_trial_feedback: bool = False   # DMC E_T update between polls; the
+    #                                  damping lives on DMCPropagator (the
+    #                                  one knob), not here
 
 
 @dataclasses.dataclass
 class RunConfig:
+    """DEPRECATED one-release shim for the pre-backend manager config.
+
+    Mixed run control with resource layout; split into ``RunControl`` +
+    an ``ExecutorBackend`` (plus manager tree kwargs).  Construction warns;
+    ``QMCManager`` still accepts one and converts.
+    """
+
     n_workers: int = 4
     n_forwarders: int = 0            # 0 -> one per worker (+1 root)
-    target_error: float = 0.0        # stop when stderr below this (0: off)
-    max_blocks: int = 0              # stop after this many blocks (0: off)
-    wall_clock_limit: float = 0.0    # seconds (0: off)
+    target_error: float = 0.0
+    max_blocks: int = 0
+    wall_clock_limit: float = 0.0
     poll_interval: float = 0.05
     subblocks_per_block: int = 4
     n_kept: int = 64                 # walker reservoir size
-    e_trial_feedback: bool = False   # DMC E_T update between polls; the
-    #                                  damping lives on DMCPropagator (the
-    #                                  one knob), not here
+    e_trial_feedback: bool = False
     drain_timeout: float = 3.0
+
+    def __post_init__(self):
+        warnings.warn(
+            'RunConfig is deprecated: pass RunControl(...) plus an '
+            'ExecutorBackend (runtime.backends) to QMCManager, or use '
+            'launch.spec.RunSpec/build_run; this shim is kept for one '
+            'release.', DeprecationWarning, stacklevel=3)
+
+    def _control(self) -> RunControl:
+        return RunControl(max_blocks=self.max_blocks,
+                          target_error=self.target_error,
+                          wall_clock_limit=self.wall_clock_limit,
+                          poll_interval=self.poll_interval,
+                          subblocks_per_block=self.subblocks_per_block,
+                          e_trial_feedback=self.e_trial_feedback)
 
 
 class QMCManager:
-    def __init__(self, sampler: Sampler, run_key: str, cfg: RunConfig,
-                 db: ResultDatabase | None = None, seed: int = 0):
+    def __init__(self, sampler: Sampler, run_key: str,
+                 control: RunControl | RunConfig | None = None,
+                 db: ResultDatabase | None = None, seed: int = 0,
+                 backend: ExecutorBackend | None = None,
+                 n_forwarders: int = 0, n_kept: int | None = None,
+                 drain_timeout: float | None = None):
+        if isinstance(control, RunConfig):     # one-release compat shim
+            cfg = control
+            control = cfg._control()
+            backend = backend or ThreadBackend(cfg.n_workers)
+            # explicit kwargs win over the shim's fields
+            n_forwarders = n_forwarders or cfg.n_forwarders
+            n_kept = n_kept if n_kept is not None else cfg.n_kept
+            drain_timeout = (drain_timeout if drain_timeout is not None
+                             else cfg.drain_timeout)
         self.sampler = sampler
         self.run_key = run_key
-        self.cfg = cfg
+        self.control = control or RunControl()
+        self.backend = backend or ThreadBackend()
         self.db = db or ResultDatabase()
-        n_fwd = cfg.n_forwarders or (cfg.n_workers + 1)
+        self.n_kept = n_kept = 64 if n_kept is None else n_kept
+        self.drain_timeout = 3.0 if drain_timeout is None else drain_timeout
+        n_fwd = n_forwarders or (self.backend.n_workers + 1)
         self.tree: list[Forwarder] = build_tree(n_fwd, self.db,
-                                                n_kept=cfg.n_kept)
-        self.workers: list[Worker] = []
+                                                n_kept=n_kept)
+        self.workers: list[WorkerHandle] = []
         self._seed = seed
         self._next_worker_id = 0
         self._t0 = time.monotonic()
@@ -61,8 +125,15 @@ class QMCManager:
         # while true replays (merging the same DB twice) still dedupe.
         self.job_id = uuid.uuid4().hex[:12]
 
+    # -- compat ---------------------------------------------------------------
+    @property
+    def cfg(self):
+        """Deprecated alias for ``control`` (pre-backend attribute name)."""
+        return self.control
+
     # -- elastic resources ----------------------------------------------------
-    def add_worker(self, init_walkers: np.ndarray | None = None) -> Worker:
+    def add_worker(self, init_walkers: np.ndarray | None = None
+                   ) -> WorkerHandle:
         """Join a new computational resource to the running calculation."""
         wid = self._next_worker_id
         self._next_worker_id += 1
@@ -79,15 +150,15 @@ class QMCManager:
         # one base seed for the run; per-worker/per-sub-block streams are
         # derived by fold_in(PRNGKey(seed), worker_id/step) in the sampler,
         # so streams never collide however many workers or blocks a run has
-        w = Worker(wid, self.sampler, self.run_key, fwd,
-                   seed=self._seed,
-                   subblocks_per_block=self.cfg.subblocks_per_block,
-                   init_walkers=init_walkers, job=self.job_id)
+        w = self.backend.spawn(
+            wid, self.sampler, self.run_key, fwd, seed=self._seed,
+            subblocks_per_block=self.control.subblocks_per_block,
+            init_walkers=init_walkers, job=self.job_id)
         self.workers.append(w)
-        w.start()
         return w
 
-    def remove_worker(self, worker: Worker, graceful: bool = True) -> None:
+    def remove_worker(self, worker: WorkerHandle,
+                      graceful: bool = True) -> None:
         """Best-effort-mode preemption (graceful) or failure (not)."""
         if graceful:
             worker.stop()
@@ -96,11 +167,20 @@ class QMCManager:
 
     # -- run loop ---------------------------------------------------------
     def start(self) -> None:
-        for _ in range(self.cfg.n_workers):
+        for _ in range(self.backend.n_workers):
             self.add_worker()
 
+    def reset_wall_clock(self) -> None:
+        """Restart the wall-clock-limit budget from now.
+
+        The budget normally starts at construction (a batch-system
+        allocation includes startup), but slow-booting substrates (the
+        process backend spawns interpreters) may prefer to start it once
+        workers report ready."""
+        self._t0 = time.monotonic()
+
     def should_stop(self, avg: RunningAverage) -> bool:
-        c = self.cfg
+        c = self.control
         if c.wall_clock_limit and (time.monotonic() - self._t0
                                    > c.wall_clock_limit):
             return True
@@ -111,12 +191,13 @@ class QMCManager:
         return False
 
     def poll(self) -> RunningAverage:
+        self.backend.tick(self)
         avg = self.db.running_average(self.run_key)
-        if (self.cfg.e_trial_feedback and avg.n_blocks > 0
+        if (self.control.e_trial_feedback and avg.n_blocks > 0
                 and np.isfinite(avg.energy)):
             for w in self.workers:
                 if w.running:
-                    w.e_trial_update = avg.energy
+                    w.send_e_trial(avg.energy)
         return avg
 
     def run(self) -> RunningAverage:
@@ -124,7 +205,7 @@ class QMCManager:
         if not self.workers:
             self.start()
         while True:
-            time.sleep(self.cfg.poll_interval)
+            time.sleep(self.control.poll_interval)
             avg = self.poll()
             if self.should_stop(avg):
                 break
@@ -133,12 +214,19 @@ class QMCManager:
         return self.shutdown()
 
     def shutdown(self) -> RunningAverage:
-        """Paper's termination walk: signal workers -> flush -> drain tree."""
+        """Paper's termination walk: signal workers -> flush -> drain tree.
+
+        Identical on every substrate: stop (flushes truncated blocks),
+        join, tear down the backend transport, drain the tree leaves-first
+        so final pushes travel through still-live ancestors, checkpoint
+        the walker reservoir.
+        """
         for w in self.workers:
             w.stop()
         for w in self.workers:
             w.join()
-        deadline = time.monotonic() + self.cfg.drain_timeout
+        self.backend.shutdown()
+        deadline = time.monotonic() + self.drain_timeout
         # drain: wait until the root has absorbed in-flight packets
         last = -1
         while time.monotonic() < deadline:

@@ -14,20 +14,17 @@ RNG: the state threaded through the worker is ``(worker_key, prop_state)``;
 sub-block keys are ``fold_in(worker_key, step)`` — no seed arithmetic, so
 worker streams can never alias however many sub-blocks a run takes.
 
-``VMCSampler`` / ``DMCSampler`` remain as deprecated shims for one release.
+A ``BlockSampler`` is picklable until first use (the driver drops its jit
+cache on pickling), which is how the ProcessBackend ships one to each
+worker process.
 """
 from __future__ import annotations
-
-import warnings
 
 import numpy as np
 
 import jax
 
-from repro.core.dmc import DMCPropagator
 from repro.core.driver import EnsembleDriver
-from repro.core.vmc import VMCPropagator
-from repro.core.wavefunction import WavefunctionConfig, WavefunctionParams
 from repro.runtime.blocks import BlockAccumulator
 
 
@@ -62,33 +59,3 @@ class BlockSampler:
         ens = st.ens if hasattr(st, 'ens') else st
         return ((wkey, st), BlockAccumulator.from_stats(stats),
                 np.asarray(ens.r), np.asarray(ens.e_loc))
-
-
-_SHIM = ('%s is deprecated: construct BlockSampler(%s(cfg, ...), params, '
-         '...) instead; this shim is kept for one release.')
-
-
-class VMCSampler(BlockSampler):
-    """Deprecated shim over ``BlockSampler(VMCPropagator(...), ...)``."""
-
-    def __init__(self, cfg: WavefunctionConfig, params: WavefunctionParams,
-                 n_walkers: int = 32, steps: int = 50, tau: float = 0.3):
-        warnings.warn(_SHIM % ('VMCSampler', 'VMCPropagator'),
-                      DeprecationWarning, stacklevel=2)
-        super().__init__(VMCPropagator(cfg, tau), params,
-                         n_walkers=n_walkers, steps=steps)
-
-
-class DMCSampler(BlockSampler):
-    """Deprecated shim over ``BlockSampler(DMCPropagator(...), ...)``."""
-
-    def __init__(self, cfg: WavefunctionConfig, params: WavefunctionParams,
-                 e_trial: float, n_walkers: int = 32, steps: int = 50,
-                 tau: float = 0.02, equil_steps: int = 100,
-                 vmc_tau: float = 0.3):
-        warnings.warn(_SHIM % ('DMCSampler', 'DMCPropagator'),
-                      DeprecationWarning, stacklevel=2)
-        super().__init__(
-            DMCPropagator(cfg, e_trial=e_trial, tau=tau,
-                          equil_steps=equil_steps, vmc_tau=vmc_tau),
-            params, n_walkers=n_walkers, steps=steps)

@@ -41,7 +41,7 @@ class Sampler(Protocol):
 
 class Worker:
     def __init__(self, worker_id: int, sampler: Sampler, run_key: str,
-                 forwarder: Forwarder, seed: int,
+                 forwarder: 'Forwarder', seed: int,
                  subblocks_per_block: int = 4,
                  init_walkers: np.ndarray | None = None, job: str = ''):
         self.worker_id = worker_id
@@ -63,6 +63,10 @@ class Worker:
     def start(self):
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
+
+    def send_e_trial(self, e_trial: float):
+        """Between-block scalar feedback (the WorkerHandle mailbox)."""
+        self.e_trial_update = float(e_trial)
 
     def stop(self):
         """SIGTERM analogue: flush the in-flight partial block, then exit."""

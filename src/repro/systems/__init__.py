@@ -1,0 +1,25 @@
+"""System catalog: named molecules + the paper's benchmark systems.
+
+``build_system(name)`` is the single name -> (WavefunctionConfig, params)
+resolver used by ``launch.spec.RunSpec`` and the ``qmc_run`` CLI: real
+molecules (`h`, `h2`, `heh+`, `water`) get exact small-basis wavefunctions;
+paper bench names (`smallest`, `b-strand`, `b-strand-tz`, `1ze7`, `1amb`,
+...) get synthetic sparse-method wavefunctions sized like Table IV.
+"""
+from __future__ import annotations
+
+MOLECULES = ('h', 'h2', 'heh+', 'water')
+
+
+def build_system(name: str):
+    """Resolve a system name to ``(WavefunctionConfig, params)``."""
+    if name in MOLECULES:
+        from repro.systems import molecule as mol
+        fn = {'h': mol.hydrogen, 'h2': mol.h2, 'heh+': mol.heh_plus,
+              'water': mol.water}[name]
+        return mol.build_wavefunction(*fn())
+    from repro.systems.bench import build_bench_wavefunction, paper_system
+    return build_bench_wavefunction(paper_system(name), method='sparse')
+
+
+__all__ = ['MOLECULES', 'build_system']

@@ -1,0 +1,219 @@
+"""ExecutorBackend substrates: process isolation, simulated-grid chaos.
+
+The paper's §V claims ("universal ... adapted to all kinds of
+computational platforms", fault tolerance by droppable blocks) become
+testable here: the same manager + FakeSampler runs on threads, OS
+processes, and a deterministic simulated grid, and the chaos drills
+assert that crashes, kills, drops, and latency never bias the weighted
+running average.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import (ProcessBackend, QMCManager, RunControl,
+                           SimGridBackend, SimGridConfig, ThreadBackend,
+                           make_backend)
+from repro.runtime.backends import SimChannel
+from repro.runtime.forwarder import Forwarder
+
+from test_runtime import FakeSampler
+
+
+# ---------------------------------------------------------------------------
+# ProcessBackend: real OS-process isolation
+# ---------------------------------------------------------------------------
+def test_process_backend_smoke():
+    """Workers in separate processes: blocks flow through pickled packets
+    into the host forwarder tree and reach the block target unbiased."""
+    ctl = RunControl(max_blocks=10, poll_interval=0.05)
+    mgr = QMCManager(FakeSampler(delay=0.002), 'pb1', ctl,
+                     backend=ProcessBackend(2))
+    avg = mgr.run()
+    assert not mgr.worker_errors(), mgr.worker_errors()
+    assert avg.n_blocks >= 10
+    assert abs(avg.energy - (-3.0)) < 0.15
+    assert all(not w.running for w in mgr.workers)
+
+
+def test_process_backend_crash_is_sigkill_no_flush():
+    """crash() on a process worker is a SIGKILL: nothing of its in-flight
+    block reaches the database, and the run completes on the survivor."""
+    ctl = RunControl(max_blocks=12, poll_interval=0.05,
+                     subblocks_per_block=4)
+    mgr = QMCManager(FakeSampler(delay=0.01), 'pb2', ctl,
+                     backend=ProcessBackend(2))
+    mgr.start()
+    time.sleep(0.3)
+    crashed = mgr.workers[0]
+    mgr.remove_worker(crashed, graceful=False)
+    crashed.join()
+    assert not crashed.running
+    avg = mgr.run()
+    assert avg.n_blocks >= 12
+    assert abs(avg.energy - (-3.0)) < 0.2
+
+
+def test_process_backend_graceful_stop_flushes_truncated_block():
+    """The stop control message truncates the huge block mid-flight and
+    the partial block still lands with its (smaller) weight."""
+    ctl = RunControl(subblocks_per_block=1000,     # never completes whole
+                     wall_clock_limit=0.8, poll_interval=0.05)
+    mgr = QMCManager(FakeSampler(delay=0.005), 'pb3', ctl,
+                     backend=ProcessBackend(1))
+    mgr.start()
+    h = mgr.workers[0]
+    deadline = time.time() + 20
+    while not h.ready and time.time() < deadline:   # spawn boot is slow
+        time.sleep(0.05)                            # (pump thread sets it)
+    assert h.ready, (h.error, h.process.exitcode)
+    mgr.reset_wall_clock()          # budget starts once the child is up
+    avg = mgr.run()
+    assert avg.n_blocks >= 1, (avg, mgr.worker_errors())
+    assert avg.weight > 0
+    assert abs(avg.energy - (-3.0)) < 0.3
+
+
+def test_process_pump_survives_corrupt_packet():
+    """A SIGKILL'd child can corrupt its queue mid-write; an undecodable
+    packet is dropped (the unbiasedness contract covers it) and must not
+    kill the pump thread other workers share."""
+    import queue as q
+    from repro.runtime.backends import ProcessWorkerHandle, _encode
+
+    class _Q:                      # stand-in up-queue with a bad packet
+        def __init__(self, items):
+            self.items = list(items)
+
+        def get_nowait(self):
+            if not self.items:
+                raise q.Empty
+            return self.items.pop(0)
+
+    fwd = Forwarder(0)             # never started: pure ingress sink
+    h = ProcessWorkerHandle(0, process=None, up_q=_Q(
+        [b'not-a-packet', _encode('ready', 0)]), ctrl_q=None,
+        forwarder=fwd, init_walkers=None)
+    assert h.pump() == 2           # both packets consumed, none fatal
+    assert h.packets_corrupt == 1
+    assert h.ready                 # the good packet behind it still lands
+
+
+def test_process_backend_restart_walkers_reach_children():
+    """Reservoir-sampled restart positions are pickled into the child."""
+    from repro.runtime import ResultDatabase
+    db = ResultDatabase()
+    ctl = RunControl(max_blocks=6, poll_interval=0.05)
+    QMCManager(FakeSampler(), 'pb4', ctl, db=db,
+               backend=ProcessBackend(2)).run()
+    assert db.load_reservoir('pb4') is not None
+    mgr2 = QMCManager(FakeSampler(), 'pb4', ctl, db=db,
+                      backend=ProcessBackend(2))
+    mgr2.start()
+    assert any(w.init_walkers is not None for w in mgr2.workers)
+    avg2 = mgr2.run()
+    assert avg2.n_blocks > 6
+
+
+# ---------------------------------------------------------------------------
+# SimGridBackend: deterministic chaos drills
+# ---------------------------------------------------------------------------
+def test_simgrid_chaos_drill_converges():
+    """The acceptance drill: 1 worker hard-crash + 1 forwarder kill +
+    packet drop + latency — the run still converges and the surviving
+    blocks' weighted average is unbiased (dropped/absent blocks were
+    never counted)."""
+    grid = SimGridConfig(latency=0.001, drop_rate=0.1, seed=3,
+                         worker_failures=((0, 2),),       # crash after 2 blk
+                         forwarder_failures=((1, 8),))    # kill at 8 db blk
+    ctl = RunControl(max_blocks=30, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(delay=0.002), 'sg1', ctl,
+                     backend=SimGridBackend(4, grid=grid), n_forwarders=7)
+    avg = mgr.run()
+    assert avg.n_blocks >= 30
+    assert abs(avg.energy - (-3.0)) < 0.15       # unbiased despite chaos
+    assert not mgr.tree[1].alive                 # forwarder really died
+    assert not mgr.backend.handles[0].running    # worker really died
+    assert mgr.backend.packets_dropped() > 0     # grid really lossy
+
+
+def test_simgrid_drops_are_deterministic():
+    """Same seed => identical per-channel drop decisions (replayable)."""
+    def decisions(seed, n=200):
+        fwd = Forwarder(0)               # never started: pure ingress sink
+        chan = SimChannel(fwd, np.random.default_rng([seed, 0]),
+                          drop_rate=0.3)
+        out = []
+        for _ in range(n):
+            before = chan.dropped
+            chan.submit_blocks([])
+            out.append(chan.dropped > before)
+        return out
+
+    assert decisions(7) == decisions(7)
+    assert decisions(7) != decisions(8)
+
+
+def test_simgrid_zero_chaos_equals_thread_semantics():
+    """With no injected pathologies the sim substrate is just threads."""
+    ctl = RunControl(max_blocks=10, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(), 'sg2', ctl,
+                     backend=SimGridBackend(2, grid=SimGridConfig()))
+    avg = mgr.run()
+    assert avg.n_blocks >= 10
+    assert abs(avg.energy - (-3.0)) < 0.1
+    assert mgr.backend.packets_dropped() == 0
+
+
+def test_make_backend_factory():
+    assert isinstance(make_backend('thread', 3), ThreadBackend)
+    assert isinstance(make_backend('process', 2), ProcessBackend)
+    sim = make_backend('sim', 2, grid=SimGridConfig(drop_rate=0.5))
+    assert isinstance(sim, SimGridBackend)
+    assert sim.grid.drop_rate == 0.5
+    with pytest.raises(ValueError, match='unknown backend'):
+        make_backend('mpi', 2)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: same RunSpec, every substrate, consistent physics
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize('method,exact', [('vmc', -1.15), ('dmc', -1.17)])
+def test_backends_statistically_consistent_energies(method, exact):
+    """thread / process / sim complete the same small H2 RunSpec and land
+    on statistically consistent energies."""
+    from repro.launch.spec import RunSpec, build_run
+    energies = {}
+    for backend in ('thread', 'process', 'sim'):
+        spec = RunSpec(system='h2', method=method, backend=backend,
+                       n_workers=2, n_walkers=12, steps=10, max_blocks=6,
+                       equil_steps=30,
+                       grid=SimGridConfig(latency=0.001, drop_rate=0.05,
+                                          seed=1))
+        run = build_run(spec)
+        avg = run.run()
+        assert not run.worker_errors(), (backend, run.worker_errors())
+        assert avg.n_blocks >= 6, (backend, avg)
+        energies[backend] = avg.energy
+    for b, e in energies.items():
+        assert abs(e - exact) < 0.15, (b, energies)
+    es = list(energies.values())
+    assert max(es) - min(es) < 0.2, energies
+
+
+@pytest.mark.slow
+def test_simgrid_chaos_drill_real_sampler_converges():
+    """Chaos drill on real QMC (H2 VMC): worker crash + forwarder kill
+    mid-run still converge to the variational energy."""
+    from repro.launch.spec import RunSpec, build_run
+    spec = RunSpec(system='h2', method='vmc', backend='sim',
+                   n_workers=3, n_walkers=12, steps=10, max_blocks=12,
+                   grid=SimGridConfig(latency=0.001, drop_rate=0.1, seed=2,
+                                      worker_failures=((0, 1),),
+                                      forwarder_failures=((1, 4),)))
+    run = build_run(spec)
+    avg = run.run()
+    assert avg.n_blocks >= 12
+    assert abs(avg.energy - (-1.15)) < 0.12, avg

@@ -30,36 +30,67 @@ def h2_wf():
 
 
 # ---------------------------------------------------------------------------
-# driver basics + deprecated wrappers
+# driver basics + the method registry
 # ---------------------------------------------------------------------------
-def test_driver_vmc_block_and_legacy_wrapper_agree(h2_wf):
-    """make_vmc_block is a shim over the driver: identical numbers."""
-    from repro.core.vmc import make_vmc_block
+def test_driver_vmc_block_stats_contract(h2_wf):
+    """One VMC block: typed BlockStats with walker-step weight + aux."""
     cfg, params = h2_wf
     drv = EnsembleDriver(VMCPropagator(cfg, tau=0.3), steps=8, donate=False)
     ens = drv.init(params, jax.random.PRNGKey(0), 16)
     _, stats = drv.run_block(params, ens, jax.random.PRNGKey(1))
-    with pytest.deprecated_call():
-        blk = make_vmc_block(cfg, steps=8, tau=0.3)
-    _, legacy = blk(params, ens, jax.random.PRNGKey(1))
-    assert float(stats.e_mean) == float(legacy.e_mean)
-    assert float(stats.aux['accept']) == float(legacy.accept)
-    assert float(stats.weight) == float(legacy.weight) == 8 * 16
+    assert float(stats.weight) == 8 * 16
+    assert np.isfinite(float(stats.e_mean))
+    assert set(stats.aux) == {'accept', 'ao_fill', 'e_kin', 'e_pot'}
 
 
-def test_driver_dmc_block_and_legacy_wrapper_agree(h2_wf):
-    from repro.core.dmc import make_dmc_block
+def test_driver_dmc_block_stats_contract(h2_wf):
     cfg, params = h2_wf
     ens = init_walkers(cfg, params, jax.random.PRNGKey(0), 16)
     state = init_dmc(ens, e_trial=-1.1)
     drv = EnsembleDriver(DMCPropagator(cfg, e_trial=-1.1, tau=0.02),
                          steps=8, donate=False)
     _, stats = drv.run_block(params, state, jax.random.PRNGKey(1))
-    with pytest.deprecated_call():
-        blk = make_dmc_block(cfg, steps=8, tau=0.02)
-    _, legacy = blk(params, state, jax.random.PRNGKey(1))
-    assert float(stats.e_mean) == float(legacy.e_mean)
-    assert float(stats.aux['pop_weight']) == float(legacy.pop_weight)
+    assert np.isfinite(float(stats.e_mean))
+    assert set(stats.aux) == {'accept', 'pop_weight', 'sign_flips'}
+
+
+def test_make_propagator_registry(h2_wf):
+    """The one place method strings resolve — used by RunSpec and the CLI."""
+    from repro.core.dmc import DMCPropagator as DMC
+    from repro.core.driver import make_propagator
+    from repro.core.sem import SEMVMCPropagator
+    cfg, _ = h2_wf
+    assert isinstance(make_propagator('vmc', cfg), VMCPropagator)
+    dmc = make_propagator('dmc', cfg, e_trial=-1.2)
+    assert isinstance(dmc, DMC) and dmc.e_trial0 == -1.2
+    assert make_propagator('dmc', cfg).e_trial0 == -0.5 * cfg.n_elec
+    sem = make_propagator('sem-vmc', cfg, tau=0.45)
+    assert isinstance(sem, SEMVMCPropagator)
+    assert sem.step_size == pytest.approx(0.45)
+    assert make_propagator('vmc', cfg).tau == pytest.approx(0.3)  # default
+    with pytest.raises(ValueError, match='unknown method'):
+        make_propagator('gfmc', cfg)
+
+
+def test_driver_pickles_without_jit_cache_and_rejects_mesh(h2_wf):
+    """ProcessBackend contract: pickling drops the compiled cache; a
+    device-mesh driver refuses to travel to another process."""
+    import pickle
+    from jax.sharding import Mesh
+    cfg, params = h2_wf
+    drv = EnsembleDriver(VMCPropagator(cfg, tau=0.3), steps=4, donate=False)
+    ens = drv.init(params, jax.random.PRNGKey(0), 8)
+    drv.run_block(params, ens, jax.random.PRNGKey(1))   # populate cache
+    assert drv._compiled
+    clone = pickle.loads(pickle.dumps(drv))
+    assert not clone._compiled
+    _, stats = clone.run_block(params, ens, jax.random.PRNGKey(1))
+    assert np.isfinite(float(stats.e_mean))
+    meshed = EnsembleDriver(VMCPropagator(cfg, tau=0.3), steps=4,
+                            mesh=Mesh(np.array(jax.devices()[:1]),
+                                      ('walkers',)))
+    with pytest.raises(TypeError, match='mesh'):
+        pickle.dumps(meshed)
 
 
 def test_feedback_routes_through_update_e_trial(h2_wf):

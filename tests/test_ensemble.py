@@ -76,14 +76,16 @@ def test_make_batched_dispatch():
 
 def test_vmc_block_same_physics_both_paths():
     """One VMC block, same key: ensemble and vmap paths agree closely."""
-    from repro.core.vmc import init_walkers, make_vmc_block
+    from repro.core.driver import EnsembleDriver
+    from repro.core.vmc import VMCPropagator, init_walkers
     cfg_e, params = build_wavefunction(*h2())
     cfg_v = dataclasses.replace(cfg_e, ensemble_eval=False)
     stats = {}
     for tag, cfg in [('ens', cfg_e), ('vmap', cfg_v)]:
         ens = init_walkers(cfg, params, jax.random.PRNGKey(0), 32)
-        blk = make_vmc_block(cfg, steps=15, tau=0.3)
-        _, s = blk(params, ens, jax.random.PRNGKey(5))
+        drv = EnsembleDriver(VMCPropagator(cfg, tau=0.3), steps=15,
+                             donate=False)
+        _, s = drv.run_block(params, ens, jax.random.PRNGKey(5))
         stats[tag] = float(s.e_mean)
     assert abs(stats['ens'] - stats['vmap']) < 1e-4, stats
 

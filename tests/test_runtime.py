@@ -5,8 +5,8 @@ import numpy as np
 import pytest
 
 from repro.runtime import (BlockAccumulator, QMCManager, ResultDatabase,
-                           RunConfig, WalkerReservoir, combine_blocks,
-                           critical_data_key)
+                           RunControl, ThreadBackend, WalkerReservoir,
+                           combine_blocks, critical_data_key)
 from repro.runtime.blocks import BlockResult
 from repro.runtime.forwarder import build_tree
 
@@ -44,33 +44,35 @@ class FakeSampler:
         return state, stats, walkers, e[:self.n_walkers]
 
 
-def _run_manager(cfg, sampler=None, key='deadbeef', **mgr_kw):
-    mgr = QMCManager(sampler or FakeSampler(), key, cfg, **mgr_kw)
+def _run_manager(control, n_workers, sampler=None, key='deadbeef',
+                 **mgr_kw):
+    mgr = QMCManager(sampler or FakeSampler(), key, control,
+                     backend=ThreadBackend(n_workers), **mgr_kw)
     avg = mgr.run()
     return mgr, avg
 
 
 # ---------------------------------------------------------------------------
 def test_basic_run_reaches_block_target():
-    cfg = RunConfig(n_workers=3, max_blocks=12, poll_interval=0.02)
-    mgr, avg = _run_manager(cfg)
+    ctl = RunControl(max_blocks=12, poll_interval=0.02)
+    mgr, avg = _run_manager(ctl, n_workers=3)
     assert avg.n_blocks >= 12
     assert abs(avg.energy - (-3.0)) < 0.1
     assert not mgr.worker_errors()
 
 
 def test_error_bar_stopping_condition():
-    cfg = RunConfig(n_workers=2, target_error=0.05, poll_interval=0.02)
-    _, avg = _run_manager(cfg)
+    ctl = RunControl(target_error=0.05, poll_interval=0.02)
+    _, avg = _run_manager(ctl, n_workers=2)
     assert avg.error < 0.05
 
 
 def test_worker_crash_does_not_bias_average():
     """Hard-kill a worker mid-run: result stays unbiased, run completes."""
-    cfg = RunConfig(n_workers=4, max_blocks=24, poll_interval=0.02,
-                    subblocks_per_block=2)
+    ctl = RunControl(max_blocks=24, poll_interval=0.02,
+                     subblocks_per_block=2)
     sampler = FakeSampler(delay=0.002)
-    mgr = QMCManager(sampler, 'k1', cfg)
+    mgr = QMCManager(sampler, 'k1', ctl, backend=ThreadBackend(4))
     mgr.start()
     time.sleep(0.1)
     mgr.remove_worker(mgr.workers[0], graceful=False)   # crash, no flush
@@ -82,10 +84,10 @@ def test_worker_crash_does_not_bias_average():
 def test_forwarder_death_routes_around():
     """Killing a mid-tree forwarder loses at most that node's in-flight
     packet; children re-route to ancestors and the run completes."""
-    cfg = RunConfig(n_workers=4, n_forwarders=7, max_blocks=30,
-                    poll_interval=0.02)
+    ctl = RunControl(max_blocks=30, poll_interval=0.02)
     sampler = FakeSampler(delay=0.002)
-    mgr = QMCManager(sampler, 'k2', cfg)
+    mgr = QMCManager(sampler, 'k2', ctl, backend=ThreadBackend(4),
+                     n_forwarders=7)
     mgr.start()
     time.sleep(0.15)
     mgr.kill_forwarder(1)            # an internal node with children
@@ -96,19 +98,19 @@ def test_forwarder_death_routes_around():
 
 def test_graceful_stop_flushes_truncated_block():
     """SIGTERM analogue: stopping mid-block still contributes its steps."""
-    cfg = RunConfig(n_workers=1, subblocks_per_block=1000,  # huge block
-                    wall_clock_limit=0.5, poll_interval=0.05)
+    ctl = RunControl(subblocks_per_block=1000,              # huge block
+                     wall_clock_limit=0.5, poll_interval=0.05)
     sampler = FakeSampler(delay=0.005)
-    mgr, avg = _run_manager(cfg, sampler, key='k3')
+    mgr, avg = _run_manager(ctl, n_workers=1, sampler=sampler, key='k3')
     # without truncation the single block would never finish within 0.5 s
     assert avg.n_blocks >= 1
     assert avg.weight > 0
 
 
 def test_elastic_worker_join():
-    cfg = RunConfig(n_workers=1, max_blocks=20, poll_interval=0.02)
+    ctl = RunControl(max_blocks=20, poll_interval=0.02)
     sampler = FakeSampler(delay=0.002)
-    mgr = QMCManager(sampler, 'k4', cfg)
+    mgr = QMCManager(sampler, 'k4', ctl, backend=ThreadBackend(1))
     mgr.start()
     time.sleep(0.1)
     for _ in range(3):
@@ -122,13 +124,15 @@ def test_elastic_worker_join():
 def test_restart_from_reservoir():
     """Second run on the same DB restarts workers from saved walkers."""
     db = ResultDatabase()
-    cfg = RunConfig(n_workers=2, max_blocks=8, poll_interval=0.02)
+    ctl = RunControl(max_blocks=8, poll_interval=0.02)
     sampler = FakeSampler()
-    mgr1 = QMCManager(sampler, 'k5', cfg, db=db)
+    mgr1 = QMCManager(sampler, 'k5', ctl, db=db,
+                      backend=ThreadBackend(2))
     avg1 = mgr1.run()
     assert db.load_reservoir('k5') is not None
 
-    mgr2 = QMCManager(sampler, 'k5', cfg, db=db)
+    mgr2 = QMCManager(sampler, 'k5', ctl, db=db,
+                      backend=ThreadBackend(2))
     mgr2.start()
     assert any(getattr(w, 'init_walkers', None) is not None
                for w in mgr2.workers)
@@ -140,8 +144,9 @@ def test_database_merge_grid_mode():
     """Two clusters writing separate DBs merge into one unbiased result."""
     dbs = [ResultDatabase(), ResultDatabase()]
     for i, db in enumerate(dbs):
-        cfg = RunConfig(n_workers=2, max_blocks=6, poll_interval=0.02)
-        QMCManager(FakeSampler(), 'shared', cfg, db=db, seed=100 * i).run()
+        ctl = RunControl(max_blocks=6, poll_interval=0.02)
+        QMCManager(FakeSampler(), 'shared', ctl, db=db, seed=100 * i,
+                   backend=ThreadBackend(2)).run()
     main = ResultDatabase()
     n = main.merge_from(dbs[0]) + main.merge_from(dbs[1])
     avg = main.running_average('shared')
@@ -207,9 +212,9 @@ def test_qmc_end_to_end_through_runtime():
         params, n_walkers=24, steps=30)
     key = critical_data_key(name='h2-dmc', tau=0.02,
                             mo=np.asarray(params.mo))
-    cfg = RunConfig(n_workers=2, max_blocks=10, poll_interval=0.05,
-                    subblocks_per_block=2, e_trial_feedback=True)
-    mgr = QMCManager(sampler, key, cfg)
+    ctl = RunControl(max_blocks=10, poll_interval=0.05,
+                     subblocks_per_block=2, e_trial_feedback=True)
+    mgr = QMCManager(sampler, key, ctl, backend=ThreadBackend(2))
     avg = mgr.run()
     assert not mgr.worker_errors(), mgr.worker_errors()
     assert avg.n_blocks >= 10
@@ -245,3 +250,91 @@ def test_block_accumulator_to_block_matches_combine():
     assert blk.weight == pytest.approx(as_blocks.weight)
     assert blk.e_mean == pytest.approx(as_blocks.energy)
     assert blk.aux['accept'] == pytest.approx(0.75)
+
+
+# ---------------------------------------------------------------------------
+# fault paths: tree shapes, hard deaths, shim compatibility
+# ---------------------------------------------------------------------------
+def test_build_tree_non_power_of_two_shapes():
+    """Ancestor chains are complete and correctly ordered for any node
+    count, not just the full-binary-tree sizes the defaults produce."""
+    for n_nodes in (2, 3, 5, 6, 9, 12):
+        db = ResultDatabase()
+        tree = build_tree(n_nodes, db)
+        try:
+            assert tree[0].db is db and tree[0].ancestors == []
+            for i in range(1, n_nodes):
+                chain = tree[i].ancestors
+                assert chain[0] is tree[(i - 1) // 2]     # parent first
+                assert chain[-1] is tree[0]               # ends at the root
+                # each hop in the chain is the previous node's parent
+                ids = [f.node_id for f in chain]
+                j = i
+                for nid in ids:
+                    j = (j - 1) // 2
+                    assert nid == j
+                assert j == 0
+        finally:
+            for f in tree:
+                f.stop()
+
+
+def test_non_power_of_two_tree_completes_run():
+    """A 6-node (unbalanced) forwarder tree routes every block home."""
+    ctl = RunControl(max_blocks=15, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(delay=0.002), 'k6', ctl,
+                     backend=ThreadBackend(4), n_forwarders=6)
+    avg = mgr.run()
+    assert avg.n_blocks >= 15
+    assert abs(avg.energy - (-3.0)) < 0.15
+    assert not mgr.worker_errors()
+
+
+def test_leaf_forwarder_death_drops_only_lost_blocks():
+    """Killing a *leaf* forwarder silently drops its worker's submissions;
+    the dropped blocks were never counted, so the average stays unbiased
+    and the run completes on the surviving workers."""
+    ctl = RunControl(max_blocks=24, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(delay=0.002), 'k7', ctl,
+                     backend=ThreadBackend(4), n_forwarders=7)
+    mgr.start()
+    time.sleep(0.15)
+    mgr.kill_forwarder(len(mgr.tree) - 1)          # a leaf (no children)
+    avg = mgr.run()
+    assert avg.n_blocks >= 24
+    assert abs(avg.energy - (-3.0)) < 0.15
+
+
+def test_crash_mid_block_flushes_nothing():
+    """Hard death (no flush): a worker crashed before finishing its first
+    block leaves zero rows in the database — absence, not corruption."""
+    ctl = RunControl(subblocks_per_block=1000,     # block never completes
+                     wall_clock_limit=0.6, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(delay=0.005), 'k8', ctl,
+                     backend=ThreadBackend(2))
+    mgr.start()
+    time.sleep(0.1)
+    crashed = mgr.workers[0]
+    mgr.remove_worker(crashed, graceful=False)
+    crashed.join()
+    avg = mgr.run()
+    dead_blocks = [b for b in mgr.db.blocks('k8')
+                   if b.worker_id == crashed.worker_id]
+    assert dead_blocks == []                       # nothing flushed
+    # the survivor's truncated block still lands (weighted, unbiased)
+    assert avg.n_blocks >= 1
+    assert abs(avg.energy - (-3.0)) < 0.3
+
+
+def test_runconfig_shim_constructs_manager():
+    """One-release compat: RunConfig warns but still builds a working
+    manager (converted to RunControl + ThreadBackend)."""
+    with pytest.deprecated_call():
+        from repro.runtime import RunConfig
+        cfg = RunConfig(n_workers=2, max_blocks=6, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(), 'k9', cfg)
+    assert isinstance(mgr.backend, ThreadBackend)
+    assert mgr.backend.n_workers == 2
+    assert mgr.control.max_blocks == 6
+    avg = mgr.run()
+    assert avg.n_blocks >= 6

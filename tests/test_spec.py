@@ -1,0 +1,100 @@
+"""RunSpec front-end: validation, compilation, CLI parsing, run keys."""
+import numpy as np
+import pytest
+
+from repro.launch.qmc_run import parse_spec
+from repro.launch.spec import RunSpec, build_run
+from repro.runtime import (ProcessBackend, SimGridBackend, SimGridConfig,
+                           ThreadBackend)
+
+
+def test_runspec_validation():
+    with pytest.raises(ValueError, match='unknown method'):
+        RunSpec(method='gfmc')
+    with pytest.raises(ValueError, match='unknown backend'):
+        RunSpec(backend='mpi')
+    with pytest.raises(ValueError, match='thread or sim'):
+        RunSpec(backend='process', shards=2)
+    # sharded thread/sim specs are legal (validated at build time against
+    # the visible devices)
+    RunSpec(backend='thread', shards=2)
+
+
+def test_runspec_tau_defaults():
+    assert RunSpec(method='vmc').resolved_tau() == pytest.approx(0.3)
+    assert RunSpec(method='dmc').resolved_tau() == pytest.approx(0.02)
+    assert RunSpec(method='sem-vmc').resolved_tau() == pytest.approx(0.3)
+    assert RunSpec(method='dmc', tau=0.05).resolved_tau() == \
+        pytest.approx(0.05)
+
+
+def test_runspec_replace_is_functional_update():
+    spec = RunSpec(system='h2', max_blocks=10)
+    spec2 = spec.replace(backend='sim', max_blocks=99)
+    assert spec.max_blocks == 10 and spec.backend == 'thread'
+    assert spec2.max_blocks == 99 and spec2.backend == 'sim'
+
+
+def test_build_run_assembles_stack():
+    """build_run wires spec fields into sampler/control/backend/manager."""
+    spec = RunSpec(system='h2', method='vmc', n_workers=3, n_walkers=16,
+                   steps=7, max_blocks=5, target_error=0.01,
+                   subblocks_per_block=2, backend='thread', seed=11)
+    run = build_run(spec)
+    assert isinstance(run.backend, ThreadBackend)
+    assert run.backend.n_workers == 3
+    assert run.manager.control.max_blocks == 5
+    assert run.manager.control.target_error == 0.01
+    assert run.manager.control.subblocks_per_block == 2
+    assert run.manager.control.e_trial_feedback is False   # vmc
+    assert run.sampler.n_walkers == 16
+    assert run.sampler.driver.steps == 7
+    assert run.manager._seed == 11
+    assert build_run(spec.replace(method='dmc')) \
+        .manager.control.e_trial_feedback is True
+
+
+def test_build_run_backend_selection():
+    assert isinstance(build_run(RunSpec(backend='process')).backend,
+                      ProcessBackend)
+    sim = build_run(RunSpec(
+        backend='sim', grid=SimGridConfig(drop_rate=0.2))).backend
+    assert isinstance(sim, SimGridBackend)
+    assert sim.grid.drop_rate == 0.2
+
+
+def test_run_key_is_critical_data_only():
+    """Platform axis (backend, workers, blocks, walkers) never changes the
+    run key; estimator fields (method, tau) do — paper §V.C."""
+    spec = RunSpec(system='h2', method='vmc')
+    base = build_run(spec).run_key
+    same = build_run(spec.replace(backend='sim', n_workers=7, max_blocks=3,
+                                  n_walkers=8, steps=5)).run_key
+    assert same == base
+    assert build_run(spec.replace(tau=0.17)).run_key != base
+    assert build_run(spec.replace(method='sem-vmc')).run_key != base
+
+
+def test_parse_spec_maps_cli_flags():
+    spec = parse_spec(['--system', 'h2', '--method', 'dmc', '--backend',
+                       'sim', '--workers', '5', '--walkers', '16',
+                       '--steps', '9', '--blocks', '33', '--tau', '0.04',
+                       '--sim-latency', '0.01', '--sim-drop', '0.2',
+                       '--seed', '4'])
+    assert spec.system == 'h2' and spec.method == 'dmc'
+    assert spec.backend == 'sim' and spec.n_workers == 5
+    assert spec.n_walkers == 16 and spec.steps == 9
+    assert spec.max_blocks == 33 and spec.tau == pytest.approx(0.04)
+    assert spec.grid.latency == pytest.approx(0.01)
+    assert spec.grid.drop_rate == pytest.approx(0.2)
+    assert spec.grid.seed == 4 and spec.seed == 4
+
+
+def test_build_system_catalog():
+    from repro.systems import build_system
+    cfg, params = build_system('h2')
+    assert cfg.n_elec == 2
+    assert np.asarray(params.coords).shape[0] == 2
+    with pytest.raises(KeyError):
+        from repro.systems.bench import paper_system
+        paper_system('not-a-system')

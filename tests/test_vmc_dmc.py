@@ -4,9 +4,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.dmc import init_dmc, make_dmc_block, update_e_trial
-from repro.core.vmc import init_walkers, make_vmc_block
+from repro.core.dmc import DMCPropagator, init_dmc, update_e_trial
+from repro.core.driver import EnsembleDriver
+from repro.core.vmc import VMCPropagator, init_walkers
 from repro.systems.molecule import build_wavefunction, h2, hydrogen
+
+
+def vmc_driver(cfg, steps, tau):
+    return EnsembleDriver(VMCPropagator(cfg, tau=tau), steps, donate=False)
+
+
+def dmc_driver(cfg, steps, tau):
+    # the running E_T lives in DMCState, so e_trial=0.0 here is inert
+    return EnsembleDriver(DMCPropagator(cfg, e_trial=0.0, tau=tau), steps,
+                          donate=False)
 
 
 @pytest.fixture(scope='module')
@@ -23,11 +34,11 @@ def test_vmc_hydrogen_energy(h_wf):
     cfg, params = h_wf
     key = jax.random.PRNGKey(0)
     ens = init_walkers(cfg, params, key, 256, spread=1.0)
-    blk = make_vmc_block(cfg, steps=120, tau=0.35)
-    ens, _ = blk(params, ens, jax.random.PRNGKey(1))        # equilibrate
-    ens, stats = blk(params, ens, jax.random.PRNGKey(2))
+    drv = vmc_driver(cfg, steps=120, tau=0.35)
+    ens, _ = drv.run_block(params, ens, jax.random.PRNGKey(1))  # equilibrate
+    ens, stats = drv.run_block(params, ens, jax.random.PRNGKey(2))
     assert abs(float(stats.e_mean) - (-0.5)) < 0.015
-    assert 0.3 < float(stats.accept) < 1.0
+    assert 0.3 < float(stats.aux['accept']) < 1.0
 
 
 def test_dmc_hydrogen_exact(h_wf):
@@ -35,15 +46,15 @@ def test_dmc_hydrogen_exact(h_wf):
     cfg, params = h_wf
     key = jax.random.PRNGKey(3)
     ens = init_walkers(cfg, params, key, 256, spread=1.0)
-    vblk = make_vmc_block(cfg, steps=80, tau=0.35)
-    ens, vstats = vblk(params, ens, jax.random.PRNGKey(4))
+    vdrv = vmc_driver(cfg, steps=80, tau=0.35)
+    ens, vstats = vdrv.run_block(params, ens, jax.random.PRNGKey(4))
 
     st = init_dmc(ens, e_trial=float(vstats.e_mean), window=10)
-    dblk = make_dmc_block(cfg, steps=150, tau=0.02)
-    st, _ = dblk(params, st, jax.random.PRNGKey(5))         # equilibrate
+    ddrv = dmc_driver(cfg, steps=150, tau=0.02)
+    st, _ = ddrv.run_block(params, st, jax.random.PRNGKey(5))  # equilibrate
     es = []
     for i in range(4):
-        st, ds = dblk(params, st, jax.random.PRNGKey(6 + i))
+        st, ds = ddrv.run_block(params, st, jax.random.PRNGKey(6 + i))
         st = update_e_trial(st, ds.e_mean)
         es.append(float(ds.e_mean))
     assert abs(np.mean(es) - (-0.5)) < 0.01, es
@@ -55,19 +66,19 @@ def test_dmc_h2_below_vmc(h_wf):
     cfg, params = build_wavefunction(*h2())
     key = jax.random.PRNGKey(7)
     ens = init_walkers(cfg, params, key, 192)
-    vblk = make_vmc_block(cfg, steps=120, tau=0.25)
-    ens, _ = vblk(params, ens, jax.random.PRNGKey(18))    # equilibrate
-    ens, vstats = vblk(params, ens, jax.random.PRNGKey(8))
+    vdrv = vmc_driver(cfg, steps=120, tau=0.25)
+    ens, _ = vdrv.run_block(params, ens, jax.random.PRNGKey(18))  # equil
+    ens, vstats = vdrv.run_block(params, ens, jax.random.PRNGKey(8))
     e_vmc = float(vstats.e_mean)
 
     st = init_dmc(ens, e_trial=e_vmc, window=10)
-    dblk = make_dmc_block(cfg, steps=120, tau=0.02)
+    ddrv = dmc_driver(cfg, steps=120, tau=0.02)
     for i in range(3):                                    # equilibrate
-        st, ds = dblk(params, st, jax.random.PRNGKey(9 + i))
+        st, ds = ddrv.run_block(params, st, jax.random.PRNGKey(9 + i))
         st = update_e_trial(st, ds.e_mean)
     es = []
     for i in range(4):
-        st, ds = dblk(params, st, jax.random.PRNGKey(30 + i))
+        st, ds = ddrv.run_block(params, st, jax.random.PRNGKey(30 + i))
         st = update_e_trial(st, ds.e_mean)
         es.append(float(ds.e_mean))
     e_dmc = float(np.mean(es))
@@ -80,8 +91,8 @@ def test_population_is_constant_through_dmc():
     cfg, params = build_wavefunction(*h2())
     ens = init_walkers(cfg, params, jax.random.PRNGKey(0), 64)
     st = init_dmc(ens, e_trial=-1.1)
-    dblk = make_dmc_block(cfg, steps=25, tau=0.02)
-    st2, _ = dblk(params, st, jax.random.PRNGKey(1))
+    ddrv = dmc_driver(cfg, steps=25, tau=0.02)
+    st2, _ = ddrv.run_block(params, st, jax.random.PRNGKey(1))
     assert st2.ens.r.shape == ens.r.shape                   # constant M
 
 
@@ -89,7 +100,7 @@ def test_blocks_are_reproducible():
     """Same key => bitwise-identical block stats (determinism contract)."""
     cfg, params = build_wavefunction(*h2())
     ens = init_walkers(cfg, params, jax.random.PRNGKey(0), 32)
-    blk = make_vmc_block(cfg, steps=20, tau=0.3)
-    _, s1 = blk(params, ens, jax.random.PRNGKey(5))
-    _, s2 = blk(params, ens, jax.random.PRNGKey(5))
+    drv = vmc_driver(cfg, steps=20, tau=0.3)
+    _, s1 = drv.run_block(params, ens, jax.random.PRNGKey(5))
+    _, s2 = drv.run_block(params, ens, jax.random.PRNGKey(5))
     assert float(s1.e_mean) == float(s2.e_mean)
