@@ -13,7 +13,9 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 to see the sharded
 rows); Table VIII compares single-electron-move sweeps (Sherman–Morrison
 inverse updates) against per-move full recompute and the all-electron
 propagator; Table IX is the backend parallel-efficiency table (thread vs
-process workers, steady-state blocks/s from stored block timestamps).
+process workers, steady-state blocks/s from stored block timestamps);
+Table X is the multideterminant ratio benchmark (shared-inverse SMW
+tables vs per-determinant slogdet at n_det = 1..1000).
 TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
@@ -36,7 +38,7 @@ from benchmarks import tables as T
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII,IX')
+    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII,IX,X')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -45,7 +47,8 @@ def main(argv=None) -> int:
 
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
            'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
-           'VIII': T.table_sem, 'IX': T.table_runtime}
+           'VIII': T.table_sem, 'IX': T.table_runtime,
+           'X': T.table_multidet}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

@@ -31,6 +31,15 @@ recompute between refreshes).
 Sampling statistics match the all-electron VMC propagator in distribution
 (both sample |Psi_T|^2) but not move-for-move — see DESIGN.md §6.
 
+Multideterminant trial functions (``cfg.ci``) ride the same sweeps: the
+ensemble additionally maintains the shared ratio tables P = V @ Minv and
+all determinants' current ratios, each proposal's CI factor comes from a
+rank-1 table update evaluated by ``kernels.multidet_ratio`` (Pallas when
+``cfg.method == 'kernel'``), and an accepted move applies
+``P <- P - g (x) row`` next to the Sherman–Morrison inverse update — the
+per-move cost stays O(n_orb n + n_det k^2), never O(n_det n^3)
+(DESIGN.md §8).
+
 k_max contract: per-move ratios use the *exact* (radius-screened) AO
 values, while the sparse/kernel post-sweep pipeline packs at most
 ``cfg.k_max`` active AOs per electron.  These coincide only while k_max
@@ -47,14 +56,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from . import aos, slater
+from . import aos, multidet, slater
 from .driver import (BlockStats as DriverStats, Population, register_method,
                      restart_ensemble)
 from .jastrow import jastrow_delta_one_electron, jastrow_state
 from .hamiltonian import potential_energy
 from .vmc import evaluate_ensemble, sample_positions
 from .wavefunction import (WavefunctionConfig, WavefunctionParams,
-                           _mo_tensor_ensemble, _slater_blocks)
+                           _ci_blocks, _mo_tensor_ensemble, _slater_blocks)
 
 
 class SEMEnsemble(NamedTuple):
@@ -62,16 +71,23 @@ class SEMEnsemble(NamedTuple):
 
     Unlike the all-electron ``WalkerEnsemble`` this carries the running
     inverse Slater matrices per spin block — the state Sherman–Morrison
-    updates maintain across sweeps.
+    updates maintain across sweeps — and, for multideterminant
+    wavefunctions (``cfg.ci``), the shared ratio tables P = V @ M plus all
+    determinants' current ratios (the SMW state the per-move CI evaluation
+    reads; zero-size arrays in the single-determinant case).
     """
 
     r: jnp.ndarray          # (W, n_e, 3)
     minv_up: jnp.ndarray    # (W, n_up, n_up) running inverse (elec, orb)
     minv_dn: jnp.ndarray    # (W, n_dn, n_dn)
-    sign: jnp.ndarray       # (W,) running sign of Det_up * Det_dn
-    logdet: jnp.ndarray     # (W,) running sum of log|det| over spins
-    log_psi: jnp.ndarray    # (W,) logdet + J (J recomputed every sweep)
+    sign: jnp.ndarray       # (W,) running sign of Det_up * Det_dn (ref det)
+    logdet: jnp.ndarray     # (W,) running sum of log|det| over spins (ref)
+    log_psi: jnp.ndarray    # (W,) logdet [+ log|CI sum|] + J
     e_loc: jnp.ndarray      # (W,)
+    p_up: jnp.ndarray       # (W, n_orb, n_up) shared table (ci; else (W,0,0))
+    p_dn: jnp.ndarray       # (W, n_orb, n_dn)
+    rdet_up: jnp.ndarray    # (W, n_det) per-det ratios to the reference
+    rdet_dn: jnp.ndarray    # (W, n_det)
 
 
 class SEMState(NamedTuple):
@@ -82,7 +98,15 @@ class SEMState(NamedTuple):
 
 
 def _mo_blocks(cfg: WavefunctionConfig, params: WavefunctionParams):
-    """Per-spin MO coefficient panels (rows of the 'A' matrix)."""
+    """Per-spin MO coefficient panels (rows of the 'A' matrix).
+
+    With ``cfg.ci`` both spins get the FULL shared orbital set (the
+    per-move CI evaluation needs virtual-orbital values too); the
+    occupied panel is its leading slice.
+    """
+    if cfg.ci is not None:
+        A_full = params.mo[:cfg.ci.n_orb]
+        return A_full, A_full
     A_up = params.mo[:cfg.n_up]
     A_dn = (params.mo[:cfg.n_dn] if cfg.shared_orbitals
             else params.mo[cfg.n_up:cfg.n_up + cfg.n_dn])
@@ -98,6 +122,26 @@ def _apply_update(cfg, minv, u_vec, row, accept, e):
     return sem_update_ref(minv, u_vec, row, accept, e)
 
 
+def _move_ci_ratios(cfg, P, g, row, holes, parts, r_other):
+    """All-excitation move ratios + CI sum: Pallas kernel when
+    cfg.method == 'kernel' and the excitation rank allows (k <= 2)."""
+    ci = cfg.ci
+    if cfg.method == 'kernel' and ci.k <= 2:
+        from repro.kernels.multidet_ratio.ops import multidet_ratios
+        return multidet_ratios(P, g, row, holes, parts, ci.coeffs, r_other)
+    from repro.kernels.multidet_ratio.ref import multidet_ratios_ref
+    return multidet_ratios_ref(P, g, row, holes, parts, ci.coeffs, r_other)
+
+
+def _empty_ci_state(W, dtype):
+    """Zero-size CI leaves for the single-determinant ensemble.
+
+    Four DISTINCT arrays: the driver donates the state buffers, and two
+    fields aliasing one buffer is a double donation."""
+    return (jnp.zeros((W, 0, 0), dtype), jnp.zeros((W, 0, 0), dtype),
+            jnp.zeros((W, 0), dtype), jnp.zeros((W, 0), dtype))
+
+
 def _energy_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
                      R, Cw, minv_up, minv_dn, sign, logdet) -> SEMEnsemble:
     """Assemble the SEM ensemble from maintained inverses (no inversion).
@@ -105,16 +149,52 @@ def _energy_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
     The factorization-free sibling of ``wavefunction._finish_state``:
     drift/Laplacian ratios come from ``slater.ratios_from_inverse`` against
     the running ``minv`` blocks, so the only O(n^3)-ish work left per sweep
-    is the MO tensor build the energy needs anyway.
+    is the MO tensor build the energy needs anyway.  With ``cfg.ci`` the
+    shared ratio tables and all determinant ratios are (re)built from the
+    same maintained inverses (one GEMM + gathered k×k dets per spin —
+    still zero factorizations) and grad/lap become the CI-weighted
+    contractions of ``multidet.ci_corrections``.
     """
-    up, dn = _slater_blocks(cfg, Cw)
-    gu, qu = slater.ratios_from_inverse(up, minv_up)
-    if cfg.n_dn > 0:
-        gd, qd = slater.ratios_from_inverse(dn, minv_dn)
-        sgrad = jnp.concatenate([gu, gd], axis=1)
-        slap = jnp.concatenate([qu, qd], axis=1)
+    ci = cfg.ci
+    if ci is not None:
+        up_all, dn_all = _ci_blocks(cfg, Cw)
+        p_up = multidet.reference_table(up_all[..., 0], minv_up)
+        rdet_up = multidet.det_ratios(p_up, ci.holes_up, ci.parts_up)
+        if cfg.n_dn > 0:
+            p_dn = multidet.reference_table(dn_all[..., 0], minv_dn)
+            rdet_dn = multidet.det_ratios(p_dn, ci.holes_dn, ci.parts_dn)
+        else:
+            p_dn = jnp.zeros(minv_dn.shape[:-2] + (0, 0), p_up.dtype)
+            rdet_dn = jnp.ones_like(rdet_up)
+        w, S = multidet.ci_weights(ci.coeffs, rdet_up, rdet_dn)
+        cu = multidet.ci_corrections(ci.holes_up, ci.parts_up, up_all,
+                                     minv_up, p_up, w)
+        gu, qu = slater.ratios_from_inverse(up_all[..., :cfg.n_up, :, :],
+                                            minv_up)
+        gu, qu = gu + cu[..., :3], qu + cu[..., 3]
+        if cfg.n_dn > 0:
+            cd = multidet.ci_corrections(ci.holes_dn, ci.parts_dn, dn_all,
+                                         minv_dn, p_dn, w)
+            gd, qd = slater.ratios_from_inverse(
+                dn_all[..., :cfg.n_dn, :, :], minv_dn)
+            gd, qd = gd + cd[..., :3], qd + cd[..., 3]
+            sgrad = jnp.concatenate([gu, gd], axis=1)
+            slap = jnp.concatenate([qu, qd], axis=1)
+        else:
+            sgrad, slap = gu, qu
+        _, log_ci = multidet.ci_log_sum(S)
     else:
-        sgrad, slap = gu, qu
+        up, dn = _slater_blocks(cfg, Cw)
+        gu, qu = slater.ratios_from_inverse(up, minv_up)
+        if cfg.n_dn > 0:
+            gd, qd = slater.ratios_from_inverse(dn, minv_dn)
+            sgrad = jnp.concatenate([gu, gd], axis=1)
+            slap = jnp.concatenate([qu, qd], axis=1)
+        else:
+            sgrad, slap = gu, qu
+        p_up, p_dn, rdet_up, rdet_dn = _empty_ci_state(R.shape[0],
+                                                       minv_up.dtype)
+        log_ci = jnp.zeros_like(logdet)
 
     def _tail(r, g, q):
         jas = jastrow_state(params.jastrow, r, params.coords,
@@ -127,8 +207,9 @@ def _energy_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
 
     jv, e_kin, e_pot = jax.vmap(_tail)(R, sgrad, slap)
     return SEMEnsemble(r=R, minv_up=minv_up, minv_dn=minv_dn, sign=sign,
-                       logdet=logdet, log_psi=logdet + jv,
-                       e_loc=e_kin + e_pot)
+                       logdet=logdet, log_psi=logdet + log_ci + jv,
+                       e_loc=e_kin + e_pot, p_up=p_up, p_dn=p_dn,
+                       rdet_up=rdet_up, rdet_dn=rdet_dn)
 
 
 def evaluate_sem(cfg: WavefunctionConfig, params: WavefunctionParams,
@@ -152,7 +233,7 @@ def evaluate_sem(cfg: WavefunctionConfig, params: WavefunctionParams,
 
 
 def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
-                      carry):
+                      carry, ci_args=None):
     """One Metropolis trial per electron of one spin block, all walkers.
 
     ``carry`` is ``(r, minv, sign, logdet)`` with ``minv`` the running
@@ -160,11 +241,26 @@ def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
     scanned in order, so a later electron sees the earlier accepted moves
     of the same sweep (sequential-sweep semantics, batched over walkers).
     Returns the updated carry and the per-move local acceptance fractions.
+
+    Multideterminant sweeps (``ci_args = (holes, parts, r_other)``) extend
+    the carry with ``(P, rdet)`` — this spin's shared table and all
+    determinants' running ratios.  ``A_blk`` is then the FULL orbital
+    panel; per move the CI factor of the acceptance ratio comes from the
+    rank-1-updated table (``kernels.multidet_ratio``) and an accepted move
+    applies  P <- P - g ⊗ row  alongside the Sherman–Morrison ``minv``
+    update (DESIGN.md §8).
     """
     coords, charges = params.coords, params.charges
+    ci = cfg.ci if ci_args is not None else None
+    if ci is not None:
+        holes, parts, r_other = ci_args
+        coeffs = jnp.asarray(ci.coeffs)
 
     def _move(carry, e):
-        r, minv, sign, logdet = carry
+        if ci is not None:
+            r, minv, sign, logdet, P, rdet = carry
+        else:
+            r, minv, sign, logdet = carry
         j = offset + e
         keys = jax.vmap(lambda k: jax.random.fold_in(k, j))(wkeys)
 
@@ -177,15 +273,39 @@ def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
         r_old = r[:, j]                                   # (W, 3)
         r_new = r_old + step_size * eta
         vals, _ = aos.eval_ao_values(cfg.basis, coords, r_new)  # (ao, W)
-        phi = (A_blk @ vals).T                            # (W, n_blk)
+        v_all = (A_blk @ vals).T                 # (W, n_occ | n_orb)
+        phi = v_all[:, :minv.shape[-1]]          # occupied panel
         ratio = jnp.einsum('wo,wo->w', minv[:, e, :], phi)
         d_jas = jax.vmap(
             lambda rw, rn: jastrow_delta_one_electron(
                 params.jastrow, rw, j, rn, coords, charges, cfg.n_up)
         )(r, r_new)
         log_ratio = jnp.log(jnp.abs(ratio) + 1e-30)
+        if ci is not None:
+            # CI factor: all excitation ratios off the rank-1-updated
+            # table (un-guarded 1/ratio: a near-node reference move makes
+            # the comparison NaN -> rejected, like the log barrier)
+            g_vec = jnp.einsum('woh,wh->wo', P, phi) - v_all
+            row_t = minv[:, e, :] / ratio[:, None]
+            rdet_new, S_new = _move_ci_ratios(cfg, P, g_vec, row_t,
+                                              holes, parts, r_other)
+            S_old = jnp.einsum('d,wd,wd->w', coeffs, rdet, r_other)
+            log_ci = (jnp.log(jnp.abs(S_new) + 1e-30)
+                      - jnp.log(jnp.abs(S_old) + 1e-30))
+        else:
+            log_ci = 0.0
         accept = jnp.log(jnp.maximum(u_rand, 1e-38)) < \
-            2.0 * (log_ratio + d_jas)
+            2.0 * (log_ratio + log_ci + d_jas)
+        if ci is not None:
+            # Near-REFERENCE-node guard: unlike the single-det path
+            # (where log_ratio alone makes |ratio| <= 1e-20 unacceptable),
+            # the CI factor S_new ~ 1/ratio can cancel the log barrier —
+            # the full wavefunction is finite where only the reference is
+            # singular.  The SMW representation itself (P = V @ Minv)
+            # breaks down there, so such moves are rejected outright; the
+            # excluded set has vanishing measure and the rejection keeps
+            # the guarded ``row`` below exact on every ACCEPTED walker.
+            accept = accept & (jnp.abs(ratio) > 1e-20)
 
         u_vec = jnp.einsum('weo,wo->we', minv, phi)       # (W, n_blk)
         safe = jnp.where(jnp.abs(ratio) > 1e-20, ratio, 1.0)
@@ -194,7 +314,13 @@ def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
         r = r.at[:, j].set(jnp.where(accept[:, None], r_new, r_old))
         logdet = logdet + jnp.where(accept, log_ratio, 0.0)
         sign = sign * jnp.where(accept, jnp.sign(ratio), 1.0)
-        return (r, minv, sign, logdet), jnp.mean(accept.astype(jnp.float32))
+        acc_frac = jnp.mean(accept.astype(jnp.float32))
+        if ci is not None:
+            P = jnp.where(accept[:, None, None],
+                          P - g_vec[:, :, None] * row[:, None, :], P)
+            rdet = jnp.where(accept[:, None], rdet_new, rdet)
+            return (r, minv, sign, logdet, P, rdet), acc_frac
+        return (r, minv, sign, logdet), acc_frac
 
     return jax.lax.scan(_move, carry, jnp.arange(n_blk))
 
@@ -231,19 +357,37 @@ class SEMVMCPropagator:
     def propagate(self, params, state: SEMState, key, pop: Population):
         """One sweep: n_e single-electron trials + energy + drift control."""
         cfg = self.cfg
+        ci = cfg.ci
         ens = state.ens
         wkeys = pop.walker_keys(key, ens.r.shape[0])
         A_up, A_dn = _mo_blocks(cfg, params)
 
-        carry = (ens.r, ens.minv_up, ens.sign, ens.logdet)
-        (r, minv_up, sign, logdet), acc_up = _sweep_spin_block(
-            cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size, carry)
+        if ci is not None:
+            carry = (ens.r, ens.minv_up, ens.sign, ens.logdet,
+                     ens.p_up, ens.rdet_up)
+            (r, minv_up, sign, logdet, _, rdet_up), acc_up = \
+                _sweep_spin_block(
+                    cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size,
+                    carry, ci_args=(ci.holes_up, ci.parts_up, ens.rdet_dn))
+        else:
+            carry = (ens.r, ens.minv_up, ens.sign, ens.logdet)
+            (r, minv_up, sign, logdet), acc_up = _sweep_spin_block(
+                cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size,
+                carry)
         minv_dn = ens.minv_dn
         if cfg.n_dn > 0:
-            carry = (r, minv_dn, sign, logdet)
-            (r, minv_dn, sign, logdet), acc_dn = _sweep_spin_block(
-                cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
-                self.step_size, carry)
+            if ci is not None:
+                carry = (r, minv_dn, sign, logdet, ens.p_dn, ens.rdet_dn)
+                (r, minv_dn, sign, logdet, _, _), acc_dn = \
+                    _sweep_spin_block(
+                        cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
+                        self.step_size, carry,
+                        ci_args=(ci.holes_dn, ci.parts_dn, rdet_up))
+            else:
+                carry = (r, minv_dn, sign, logdet)
+                (r, minv_dn, sign, logdet), acc_dn = _sweep_spin_block(
+                    cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
+                    self.step_size, carry)
             accepts = jnp.concatenate([acc_up, acc_dn])
         else:
             accepts = acc_up

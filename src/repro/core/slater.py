@@ -101,11 +101,92 @@ def det_ratio_one_electron(Minv: jnp.ndarray, phi_new: jnp.ndarray, j: int):
 
     Minv: (elec, orb) inverse Slater; phi_new: (orb,) new MO values at r_j'.
     Returns (ratio, updated Minv).  Beyond-paper fast path for
-    single-electron moves (the paper recomputes; we keep both).
+    single-electron moves (the paper recomputes; we keep both).  The rank-k
+    generalization (k electrons at once, or the hole/particle column
+    substitutions of a CI expansion) is ``det_ratio_rank_k``.
     """
     ratio = Minv[j] @ phi_new
     u = Minv @ phi_new                       # (elec,)
     row = Minv[j] / ratio                    # (orb,)
     Minv_new = Minv - jnp.outer(u, row)
     Minv_new = Minv_new.at[j].set(row)
+    return ratio, Minv_new
+
+
+def det_small(T: jnp.ndarray) -> jnp.ndarray:
+    """Determinant of small (..., k, k) blocks, batched.
+
+    Explicit cofactor formulas for k <= 3 (cheap, autodiff-friendly, and
+    exact on identity padding blocks); ``jnp.linalg.det`` beyond.  The k×k
+    blocks of the multideterminant Sherman–Morrison–Woodbury machinery are
+    k = excitation degree (1–2 for CIS/CISD-style expansions), so the
+    explicit path is the hot one.
+    """
+    k = T.shape[-1]
+    if k == 0:
+        return jnp.ones(T.shape[:-2], T.dtype)
+    if k == 1:
+        return T[..., 0, 0]
+    if k == 2:
+        return T[..., 0, 0] * T[..., 1, 1] - T[..., 0, 1] * T[..., 1, 0]
+    if k == 3:
+        return (T[..., 0, 0] * (T[..., 1, 1] * T[..., 2, 2]
+                                - T[..., 1, 2] * T[..., 2, 1])
+                - T[..., 0, 1] * (T[..., 1, 0] * T[..., 2, 2]
+                                  - T[..., 1, 2] * T[..., 2, 0])
+                + T[..., 0, 2] * (T[..., 1, 0] * T[..., 2, 1]
+                                  - T[..., 1, 1] * T[..., 2, 0]))
+    return jnp.linalg.det(T)
+
+
+def inv_small(T: jnp.ndarray, det: jnp.ndarray | None = None,
+              eps: float = 1e-20) -> jnp.ndarray:
+    """Inverse of small (..., k, k) blocks via the adjugate, batched.
+
+    ``det`` may be passed in (reuse from ``det_small``); near-singular
+    blocks are guarded by ``eps`` — callers weight the result by the very
+    determinant that vanishes (CI weights w_I ∝ det T_I), so the guarded
+    1/det never amplifies a term that survives the product.
+    """
+    k = T.shape[-1]
+    if det is None:
+        det = det_small(T)
+    safe = jnp.where(jnp.abs(det) > eps, det, jnp.ones_like(det))
+    if k == 1:
+        return (1.0 / safe)[..., None, None] * jnp.ones_like(T)
+    if k == 2:
+        adj = jnp.stack([
+            jnp.stack([T[..., 1, 1], -T[..., 0, 1]], axis=-1),
+            jnp.stack([-T[..., 1, 0], T[..., 0, 0]], axis=-1),
+        ], axis=-2)
+        return adj / safe[..., None, None]
+    return jnp.linalg.inv(T)
+
+
+def det_ratio_rank_k(Minv: jnp.ndarray, Phi_new: jnp.ndarray,
+                     js: jnp.ndarray):
+    """Sherman–Morrison–Woodbury ratio for replacing k Slater columns.
+
+    The rank-k generalization of ``det_ratio_one_electron``: electrons
+    ``js`` (k indices) simultaneously get new orbital-value columns
+    ``Phi_new`` (k, orb).  With ``M = D^{-1}`` maintained,
+
+        det(D') / det(D) = det(T),   T[a, b] = M[js[a]] @ Phi_new[b]
+
+    and the updated inverse is the Woodbury correction
+
+        M' = M - (M @ Phi_new^T - I[:, js]) T^{-1} M[js, :].
+
+    Returns (ratio, updated Minv).  Cost O(k n^2) against the O(n^3)
+    refactorization — the same collapse the multideterminant expansion
+    exploits per excited determinant (``core.multidet``).
+    """
+    n = Minv.shape[0]
+    Mj = Minv[js, :]                          # (k, orb)
+    T = Mj @ Phi_new.T                        # T[a,b] = M[js[a]] . phi_b
+    ratio = det_small(T)
+    U = Minv @ Phi_new.T                      # (elec, k): columns M phi_b
+    E = jnp.zeros((n, js.shape[0]), Minv.dtype).at[js, jnp.arange(
+        js.shape[0])].set(1.0)                # unit columns e_{j_a}
+    Minv_new = Minv - (U - E) @ (inv_small(T, ratio) @ Mj)
     return ratio, Minv_new

@@ -46,6 +46,14 @@ class WavefunctionConfig:
     #                                slater_state recompute every this many
     #                                sweeps; Newton–Schulz corrector between
     #                                refreshes bounds fp32 drift (DESIGN §6)
+    ci: object = None              # multidet.MultiDetWavefunction or None
+    #                                (single determinant).  When set, the
+    #                                Slater tail of every evaluation runs
+    #                                the shared-inverse CI machinery of
+    #                                core/multidet.py (DESIGN.md §8);
+    #                                params.mo must then carry the full
+    #                                orbital set (ci.n_orb rows) and
+    #                                shared_orbitals must be True.
 
     @property
     def n_elec(self) -> int:
@@ -163,6 +171,24 @@ def _slater_blocks(cfg: WavefunctionConfig, C: jnp.ndarray):
     return up, dn
 
 
+def _ci_blocks(cfg: WavefunctionConfig, C: jnp.ndarray):
+    """Full per-spin MO tensors (ALL orbital rows) for the CI machinery.
+
+    Multideterminant evaluation needs the virtual-orbital rows alongside
+    the occupied reference block, so the split keeps every row of C
+    (``cfg.ci.n_orb``) and only divides the electron axis.  Requires
+    ``shared_orbitals`` (one MO set addressed by both spins' excitation
+    lists).
+    """
+    if not cfg.shared_orbitals:
+        raise NotImplementedError(
+            'multideterminant expansions require shared_orbitals=True '
+            '(one MO row space for both spins)')
+    up = C[..., :cfg.ci.n_orb, :cfg.n_up, :]
+    dn = (C[..., :cfg.ci.n_orb, cfg.n_up:, :] if cfg.n_dn > 0 else None)
+    return up, dn
+
+
 def _finish_state(cfg: WavefunctionConfig, params: WavefunctionParams,
                   C: jnp.ndarray, r_elec: jnp.ndarray,
                   count: jnp.ndarray) -> PsiState:
@@ -170,18 +196,27 @@ def _finish_state(cfg: WavefunctionConfig, params: WavefunctionParams,
     Slater blocks -> drift/Laplacian ratios -> Jastrow -> local energy.
 
     C: (n_rows, n_e, 5); r_elec: (n_e, 3).  The batched path vmaps this, so
-    the Slater/Jastrow/energy math has a single source of truth.
+    the Slater/Jastrow/energy math has a single source of truth.  With
+    ``cfg.ci`` set the Slater tail is the shared-inverse CI sum of
+    ``core.multidet`` (same output contract, ``grad``/``lap`` become the
+    CI-weighted contractions).
     """
-    up, dn = _slater_blocks(cfg, C)
-    su, lu, gu, qu, _ = slater._spin_block(up, cfg.ns_steps)
-    if cfg.n_dn > 0:
-        sd, ld, gd, qd, _ = slater._spin_block(dn, cfg.ns_steps)
-        sign = su * sd
-        logdet = lu + ld
-        sgrad = jnp.concatenate([gu, gd], axis=0)
-        slap = jnp.concatenate([qu, qd], axis=0)
+    if cfg.ci is not None:
+        from . import multidet
+        up_all, dn_all = _ci_blocks(cfg, C)
+        sign, logdet, sgrad, slap = multidet.ci_assemble(
+            cfg.ci, up_all, dn_all, cfg.ns_steps)
     else:
-        sign, logdet, sgrad, slap = su, lu, gu, qu
+        up, dn = _slater_blocks(cfg, C)
+        su, lu, gu, qu, _ = slater._spin_block(up, cfg.ns_steps)
+        if cfg.n_dn > 0:
+            sd, ld, gd, qd, _ = slater._spin_block(dn, cfg.ns_steps)
+            sign = su * sd
+            logdet = lu + ld
+            sgrad = jnp.concatenate([gu, gd], axis=0)
+            slap = jnp.concatenate([qu, qd], axis=0)
+        else:
+            sign, logdet, sgrad, slap = su, lu, gu, qu
 
     jas = jastrow_state(params.jastrow, r_elec, params.coords,
                         params.charges, cfg.n_up)
@@ -208,14 +243,29 @@ def log_psi(cfg: WavefunctionConfig, params: WavefunctionParams,
             r_elec: jnp.ndarray):
     """(sign, log|Psi|) only — Metropolis ratios and autodiff oracles."""
     C, _ = _mo_tensor(cfg, params, r_elec)
+    jv = jastrow_value(params.jastrow, r_elec, params.coords,
+                       params.charges, cfg.n_up)
+    if cfg.ci is not None:
+        from . import multidet
+        up_all, dn_all = _ci_blocks(cfg, C)
+        up = multidet.spin_block_ci(up_all, cfg.ci.holes_up,
+                                    cfg.ci.parts_up, cfg.ns_steps)
+        if dn_all is not None:
+            dn = multidet.spin_block_ci(dn_all, cfg.ci.holes_dn,
+                                        cfg.ci.parts_dn, cfg.ns_steps)
+            r_dn, sd, ld = dn.ratios, dn.sign, dn.logdet
+        else:
+            r_dn = jnp.ones_like(up.ratios)
+            sd, ld = jnp.ones_like(up.sign), jnp.zeros_like(up.logdet)
+        S = multidet.ci_sum(cfg.ci.coeffs, up.ratios, r_dn)
+        sign_S, log_S = multidet.ci_log_sum(S)
+        return up.sign * sd * sign_S, up.logdet + ld + log_S + jv
     up, dn = _slater_blocks(cfg, C)
     su, lu = jnp.linalg.slogdet(up[..., 0])
     if cfg.n_dn > 0:
         sd, ld = jnp.linalg.slogdet(dn[..., 0])
     else:
         sd, ld = jnp.ones_like(su), jnp.zeros_like(lu)
-    jv = jastrow_value(params.jastrow, r_elec, params.coords,
-                       params.charges, cfg.n_up)
     return su * sd, lu + ld + jv
 
 

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel packages: <name>/{ref,ops,kernel}.py triplets.
+
+OPTIONAL layer: one package per compute hot-spot the paper (or a repo
+extension) optimizes with a custom kernel — a jnp semantics oracle
+(``ref``), a padding/dispatch wrapper (``ops``), and the Pallas kernel
+itself (``kernel``).
+"""

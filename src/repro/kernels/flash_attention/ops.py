@@ -31,12 +31,12 @@ def mha_flash(q, k, v, *, window: int = 0, block_q: int = 128,
     bq = min(block_q, max(8, S))
     bk = min(block_k, max(8, S))
 
-    def flat(x):
+    def _flat(x):
         x = jnp.transpose(x, (0, 2, 1, 3)).reshape(B * H, S, hd)
         x = _pad_axis(x, 1, max(bq, bk))
         return _pad_axis(x, 2, 128 if not interpret else 8)
 
-    qf, kf, vf = flat(q), flat(k), flat(v)
+    qf, kf, vf = _flat(q), _flat(k), _flat(v)
     o = flash_attention(qf, kf, vf, window=window, block_q=bq, block_k=bk,
                         interpret=interpret)
     o = o[:, :S, :hd].reshape(B, H, S, hd)

@@ -1,0 +1,53 @@
+"""Pure-jnp reference for the batched multideterminant ratio kernel.
+
+After a proposed single-electron move, every excited determinant's ratio
+to the (moved) reference is a k×k determinant of entries from the
+rank-1-updated shared table
+
+    P' = P - g ⊗ row,      T'_I[a, b] = P'[p_a, h_b]
+
+(``core.multidet`` derives P' — g = P @ phi - v_new, row = Minv[j]/ratio).
+This module evaluates all n_det ratios and the CI sum
+
+    S' = sum_I c_I det(T'_I) R_I^other
+
+for the whole walker ensemble WITHOUT materializing P': the gathered base
+blocks get the gathered rank-1 correction.  It is the semantics oracle the
+Pallas kernel (``kernel.py``) is tested against and the default CPU path
+of the multideterminant single-electron-move propagator.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import multidet, slater
+
+
+def multidet_ratios_ref(P: jnp.ndarray, g: jnp.ndarray, row: jnp.ndarray,
+                        holes, parts, coeffs,
+                        r_other: jnp.ndarray):
+    """All excitation ratios + CI sum from the shared table, one move.
+
+    Args:
+      P: (W, n_orb, n_occ) maintained table of THIS spin block (pre-move).
+      g: (W, n_orb) rank-1 row factor ``P @ phi - v_new`` of the move.
+      row: (W, n_occ) updated-inverse row ``Minv[j] / ratio_ref``.
+      holes, parts: (n_det, k) sentinel-padded excitation lists.
+      coeffs: (n_det,) CI coefficients.
+      r_other: (W, n_det) other spin block's (unchanged) ratios.
+
+    Returns (ratios (W, n_det), ci (W,)) — per-determinant ratios to the
+    moved reference and S' = sum_I c_I ratio_I r_other_I.
+    """
+    holes = jnp.asarray(holes); parts = jnp.asarray(parts)
+    k = holes.shape[-1]
+    P_ext = multidet.extend_table(P, k)
+    g_ext = multidet._pad_zero_rows(g, axis=-1, k=k)
+    row_ext = multidet._pad_zero_rows(row, axis=-1, k=k)
+    Tg = multidet.gather_t_blocks(P_ext, holes, parts)   # (W, n_det, k, k)
+    gp = g_ext[..., parts]                               # (W, n_det, k)
+    rh = row_ext[..., holes]                             # (W, n_det, k)
+    ratios = slater.det_small(Tg - gp[..., :, None] * rh[..., None, :])
+    ci = jnp.einsum('d,...d,...d->...', jnp.asarray(coeffs), ratios,
+                    r_other)
+    return ratios, ci

@@ -9,11 +9,11 @@ from repro.models.linear_scan import rwkv6_ref
 
 def wkv6_ref(r, k, v, log_w, u):
     """(BH, S, d) inputs; u: (BH, d).  Returns y: (BH, S, d)."""
-    def one(rb, kb, vb, wb, ub):
+    def _one(rb, kb, vb, wb, ub):
         d = rb.shape[-1]
         y, _ = rwkv6_ref(rb[None, None], kb[None, None], vb[None, None],
                          wb[None, None], ub[None],
                          jnp.zeros((1, 1, d, d), jnp.float32))
         return y[0, 0]
 
-    return jax.vmap(one)(r, k, v, log_w, u)
+    return jax.vmap(_one)(r, k, v, log_w, u)

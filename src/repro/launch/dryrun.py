@@ -1,11 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count="
-                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
-
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-THE two lines above run before any other import — jax locks the device
+THE two lines below run before any other import — jax locks the device
 count at first init, and the production meshes need 256/512 placeholder
 host devices.  Never set this flag globally (smoke tests and benches must
 see 1 device).
@@ -25,6 +20,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
 """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
 import argparse
 import json
 import re
@@ -145,6 +145,7 @@ def lower_cell(arch: str, shape: str, multi_pod: bool = False,
 
 def run_cell(arch: str, shape: str, multi_pod: bool = False,
              opt: dict | None = None, tag: str = 'baseline') -> dict:
+    """Lower+compile one grid cell -> cost/memory/collective report dict."""
     t0 = time.time()
     mesh_name = 'pod2x16x16' if multi_pod else 'pod16x16'
     cell = {'arch': arch, 'shape': shape, 'mesh': mesh_name, 'tag': tag,
@@ -182,6 +183,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False,
 
 
 def save_cell(cell: dict) -> Path:
+    """Write one cell report under experiments/dryrun/ and return it."""
     REPORT_DIR.mkdir(parents=True, exist_ok=True)
     name = f"{cell['arch']}_{cell['shape']}_{cell['mesh']}_{cell['tag']}.json"
     path = REPORT_DIR / name
@@ -190,6 +192,7 @@ def save_cell(cell: dict) -> Path:
 
 
 def main():
+    """CLI: run the requested cells (--arch/--shape/--multi-pod)."""
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default=None)
     ap.add_argument('--shape', default=None)

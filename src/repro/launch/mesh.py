@@ -18,6 +18,7 @@ import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The deployment mesh: (16,16) data x model, or 2x16x16 multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -38,4 +39,5 @@ def flat_walker_mesh():
 
 
 def mesh_chip_count(mesh) -> int:
+    """Total chip count of a mesh (product of its axis sizes)."""
     return int(np.prod(list(mesh.shape.values())))

@@ -37,6 +37,10 @@ def parse_spec(argv=None) -> RunSpec:
                     help='h|h2|heh+|water|smallest|b-strand|...')
     ap.add_argument('--method', choices=('vmc', 'dmc', 'sem-vmc'),
                     default='vmc')
+    ap.add_argument('--n-det', type=int, default=1,
+                    help='CI expansion size (1: single determinant; >1: '
+                         'synthetic multideterminant wavefunction, all '
+                         'ratios off the shared reference inverse)')
     ap.add_argument('--backend', choices=('thread', 'process', 'sim'),
                     default='thread',
                     help='execution substrate for the workers')
@@ -62,7 +66,8 @@ def parse_spec(argv=None) -> RunSpec:
                     help='[sim backend] per-packet loss probability')
     args = ap.parse_args(argv)
     return RunSpec(
-        system=args.system, method=args.method, tau=args.tau,
+        system=args.system, method=args.method, n_det=args.n_det,
+        tau=args.tau,
         e_trial=args.e_trial, n_walkers=args.walkers, steps=args.steps,
         shards=args.shards, backend=args.backend, n_workers=args.workers,
         grid=SimGridConfig(latency=args.sim_latency, drop_rate=args.sim_drop,
@@ -72,6 +77,7 @@ def parse_spec(argv=None) -> RunSpec:
 
 
 def main(argv=None):
+    """Parse flags, build the run, execute to completion, print stats."""
     spec = parse_spec(argv)
     run = build_run(spec)
     print(f'run_key={run.run_key} system={spec.system} '

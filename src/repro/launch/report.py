@@ -32,6 +32,7 @@ def _fmt_bytes(n):
 
 
 def roofline_table(tag: str = 'baseline') -> str:
+    """Markdown roofline summary table from saved cell reports."""
     cells = _load('roofline', tag)
     rows = ['| arch | shape | compute s | memory s | collective s | '
             'dominant | MODEL_FLOPS | useful ratio | note |',
@@ -54,6 +55,7 @@ def roofline_table(tag: str = 'baseline') -> str:
 
 
 def dryrun_table(tag: str = 'baseline') -> str:
+    """Markdown dry-run summary table (FLOPs/bytes/compile status)."""
     cells = _load('dryrun', tag)
     rows = ['| arch | shape | mesh | per-device FLOPs | coll bytes/dev | '
             'arg bytes/dev | temp bytes/dev | compile s | status |',
@@ -73,6 +75,7 @@ def dryrun_table(tag: str = 'baseline') -> str:
 
 
 def collective_mix(tag: str = 'baseline') -> str:
+    """Markdown per-collective byte mix table from roofline cells."""
     cells = [c for c in _load('roofline', tag) if c['status'] == 'ok']
     rows = ['| arch | shape | all-reduce | all-gather | reduce-scatter | '
             'all-to-all | permute |', '|---|---|---|---|---|---|---|']
@@ -87,6 +90,7 @@ def collective_mix(tag: str = 'baseline') -> str:
 
 
 def main():
+    """CLI: print the requested report section(s) as markdown."""
     ap = argparse.ArgumentParser()
     ap.add_argument('--tag', default='baseline')
     ap.add_argument('--section', default='all',

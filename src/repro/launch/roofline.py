@@ -1,8 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count="
-                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
-
 """Roofline analysis per (arch x shape x mesh) from the compiled dry-run.
 
 Three terms, in seconds (v5e):
@@ -29,6 +24,11 @@ Usage:
   PYTHONPATH=src python -m repro.launch.roofline --all
   PYTHONPATH=src python -m repro.launch.roofline --arch yi-6b --shape train_4k
 """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")).strip()
+
 import argparse
 import json
 import time
@@ -106,6 +106,7 @@ def analytic_model_flops(cfg, shape: str) -> float:
 
 def roofline_cell(arch: str, shape: str, multi_pod: bool = False,
                   opt: dict | None = None, tag: str = 'baseline') -> dict:
+    """Dry-run one cell, then attach calibrated roofline terms."""
     from repro.configs import get_config
     from repro.launch.dryrun import run_cell
     from repro.launch.mesh import make_production_mesh
@@ -145,6 +146,7 @@ def roofline_cell(arch: str, shape: str, multi_pod: bool = False,
 
 
 def save(cell: dict) -> Path:
+    """Write one roofline cell report under experiments/roofline/."""
     REPORT_DIR.mkdir(parents=True, exist_ok=True)
     name = f"{cell['arch']}_{cell['shape']}_{cell['mesh']}_{cell['tag']}.json"
     p = REPORT_DIR / name
@@ -153,6 +155,7 @@ def save(cell: dict) -> Path:
 
 
 def main():
+    """CLI: run roofline cells (--arch/--shape/--all/--multi-pod)."""
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default=None)
     ap.add_argument('--shape', default=None)

@@ -22,6 +22,8 @@ from repro.models.transformer import init_cache
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
+    """One named workload shape (sequence/batch/program kind)."""
+
     name: str
     seq_len: int
     global_batch: int

@@ -49,6 +49,11 @@ class RunSpec:
     # physics: system + wavefunction + propagator choice
     system: str = 'h2'
     method: str = 'vmc'              # vmc | dmc | sem-vmc
+    n_det: int = 1                   # CI expansion size (1: single det;
+    #                                  >1: synthetic multidet wavefunction
+    #                                  via systems.build_system, seeded by
+    #                                  ``seed`` — critical data, enters
+    #                                  the run key)
     tau: float = 0.0                 # 0 -> method default
     e_trial: float | None = None     # DMC reference energy (None: guess)
     equil_steps: int = 100           # DMC cold-start VMC equilibration
@@ -86,6 +91,8 @@ class RunSpec:
             raise ValueError(
                 'shards > 1 requires the thread or sim backend: a device '
                 'mesh cannot be shipped to worker processes')
+        if self.n_det < 1:
+            raise ValueError(f'n_det must be >= 1, got {self.n_det}')
 
     def replace(self, **kw) -> 'RunSpec':
         """Functional update (dataclasses.replace convenience)."""
@@ -114,6 +121,7 @@ class QMCRun:
 
     @property
     def backend(self):
+        """The ExecutorBackend the manager was compiled against."""
         return self.manager.backend
 
     def run(self):
@@ -121,6 +129,7 @@ class QMCRun:
         return self.manager.run()
 
     def worker_errors(self) -> list[str]:
+        """Tracebacks of workers that died during the run."""
         return self.manager.worker_errors()
 
 
@@ -135,7 +144,8 @@ def build_run(spec: RunSpec) -> QMCRun:
     """
     from repro.core.driver import make_propagator
 
-    cfg, params = build_system(spec.system)
+    cfg, params = build_system(spec.system, n_det=spec.n_det,
+                               ci_seed=spec.seed)
     tau = spec.resolved_tau()
     prop = make_propagator(spec.method, cfg, tau=tau, e_trial=spec.e_trial,
                            equil_steps=spec.equil_steps)
@@ -146,9 +156,23 @@ def build_run(spec: RunSpec) -> QMCRun:
     sampler = BlockSampler(prop, params, n_walkers=spec.n_walkers,
                            steps=spec.steps, mesh=mesh)
 
+    # the CI expansion is critical data: coefficients AND excitation lists
+    # change the estimator, so two different synthetic draws (same n_det,
+    # different seed) must never share a key.  Single-det specs add no ci_*
+    # entries, keeping pre-existing single-det keys (and database resume)
+    # stable.
+    ci_key = {}
+    if cfg.ci is not None:
+        ci_key = dict(
+            ci_coeffs=np.asarray(cfg.ci.coeffs),
+            ci_exc=np.concatenate([
+                np.asarray(cfg.ci.holes_up), np.asarray(cfg.ci.parts_up),
+                np.asarray(cfg.ci.holes_dn), np.asarray(cfg.ci.parts_dn)],
+                axis=1))
     run_key = critical_data_key(
         system=spec.system, method=spec.method, tau=tau,
-        mo=np.asarray(params.mo), coords=np.asarray(params.coords))
+        mo=np.asarray(params.mo), coords=np.asarray(params.coords),
+        **ci_key)
     db = ResultDatabase(spec.db)
     control = RunControl(max_blocks=spec.max_blocks,
                          target_error=spec.target_error,

@@ -30,6 +30,8 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                compress: bool = False, seed: int = 0,
                log_every: int = 10, remat: bool = True):
+    """Jit'd LM training loop with optional checkpointing; returns
+    (params, history).  The QMC-side analogue is the runtime manager."""
     params = init_params(jax.random.PRNGKey(seed), cfg)
     opt = adamw_init(params)
     err = None
@@ -77,6 +79,7 @@ def train_loop(cfg, *, steps: int, batch: int, seq: int, lr: float = 3e-4,
 
 
 def main():
+    """CLI: train an arch from repro.configs (--smoke for tiny runs)."""
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', required=True)
     ap.add_argument('--smoke', action='store_true')

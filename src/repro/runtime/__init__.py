@@ -35,13 +35,13 @@ from repro.runtime.blocks import (BlockAccumulator, BlockResult,
                                   combine_blocks)
 from repro.runtime.database import ResultDatabase, critical_data_key
 from repro.runtime.forwarder import Forwarder, build_tree
-from repro.runtime.manager import QMCManager, RunConfig, RunControl
+from repro.runtime.manager import QMCManager, RunControl
 from repro.runtime.reservoir import WalkerReservoir
 
 __all__ = [
     'BACKENDS', 'BlockAccumulator', 'BlockResult', 'combine_blocks',
     'ExecutorBackend', 'Forwarder', 'ProcessBackend', 'QMCManager',
-    'ResultDatabase', 'RunConfig', 'RunControl', 'SimGridBackend',
+    'ResultDatabase', 'RunControl', 'SimGridBackend',
     'SimGridConfig', 'ThreadBackend', 'WalkerReservoir', 'WorkerHandle',
     'build_tree', 'critical_data_key', 'make_backend',
 ]

@@ -24,7 +24,6 @@ from __future__ import annotations
 import dataclasses
 import time
 import uuid
-import warnings
 
 import numpy as np
 
@@ -54,58 +53,13 @@ class RunControl:
     #                                  one knob), not here
 
 
-@dataclasses.dataclass
-class RunConfig:
-    """DEPRECATED one-release shim for the pre-backend manager config.
-
-    Mixed run control with resource layout; split into ``RunControl`` +
-    an ``ExecutorBackend`` (plus manager tree kwargs).  Construction warns;
-    ``QMCManager`` still accepts one and converts.
-    """
-
-    n_workers: int = 4
-    n_forwarders: int = 0            # 0 -> one per worker (+1 root)
-    target_error: float = 0.0
-    max_blocks: int = 0
-    wall_clock_limit: float = 0.0
-    poll_interval: float = 0.05
-    subblocks_per_block: int = 4
-    n_kept: int = 64                 # walker reservoir size
-    e_trial_feedback: bool = False
-    drain_timeout: float = 3.0
-
-    def __post_init__(self):
-        warnings.warn(
-            'RunConfig is deprecated: pass RunControl(...) plus an '
-            'ExecutorBackend (runtime.backends) to QMCManager, or use '
-            'launch.spec.RunSpec/build_run; this shim is kept for one '
-            'release.', DeprecationWarning, stacklevel=3)
-
-    def _control(self) -> RunControl:
-        return RunControl(max_blocks=self.max_blocks,
-                          target_error=self.target_error,
-                          wall_clock_limit=self.wall_clock_limit,
-                          poll_interval=self.poll_interval,
-                          subblocks_per_block=self.subblocks_per_block,
-                          e_trial_feedback=self.e_trial_feedback)
-
-
 class QMCManager:
     def __init__(self, sampler: Sampler, run_key: str,
-                 control: RunControl | RunConfig | None = None,
+                 control: RunControl | None = None,
                  db: ResultDatabase | None = None, seed: int = 0,
                  backend: ExecutorBackend | None = None,
                  n_forwarders: int = 0, n_kept: int | None = None,
                  drain_timeout: float | None = None):
-        if isinstance(control, RunConfig):     # one-release compat shim
-            cfg = control
-            control = cfg._control()
-            backend = backend or ThreadBackend(cfg.n_workers)
-            # explicit kwargs win over the shim's fields
-            n_forwarders = n_forwarders or cfg.n_forwarders
-            n_kept = n_kept if n_kept is not None else cfg.n_kept
-            drain_timeout = (drain_timeout if drain_timeout is not None
-                             else cfg.drain_timeout)
         self.sampler = sampler
         self.run_key = run_key
         self.control = control or RunControl()
@@ -124,12 +78,6 @@ class QMCManager:
         # write the same (worker, block) counters without key collisions,
         # while true replays (merging the same DB twice) still dedupe.
         self.job_id = uuid.uuid4().hex[:12]
-
-    # -- compat ---------------------------------------------------------------
-    @property
-    def cfg(self):
-        """Deprecated alias for ``control`` (pre-backend attribute name)."""
-        return self.control
 
     # -- elastic resources ----------------------------------------------------
     def add_worker(self, init_walkers: np.ndarray | None = None

@@ -5,21 +5,38 @@ resolver used by ``launch.spec.RunSpec`` and the ``qmc_run`` CLI: real
 molecules (`h`, `h2`, `heh+`, `water`) get exact small-basis wavefunctions;
 paper bench names (`smallest`, `b-strand`, `b-strand-tz`, `1ze7`, `1amb`,
 ...) get synthetic sparse-method wavefunctions sized like Table IV.
+``n_det > 1`` attaches a seeded synthetic CI expansion (plus the virtual
+orbitals it excites into) to either kind — the registry behind
+``RunSpec``'s wavefunction selection, so every propagator and backend
+gets multideterminant trial functions through the same front door.
 """
 from __future__ import annotations
 
 MOLECULES = ('h', 'h2', 'heh+', 'water')
 
 
-def build_system(name: str):
-    """Resolve a system name to ``(WavefunctionConfig, params)``."""
+def build_system(name: str, n_det: int = 1, ci_seed: int = 0):
+    """Resolve a system name to ``(WavefunctionConfig, params)``.
+
+    ``n_det``: CI expansion size (1 = single determinant); ``ci_seed``
+    seeds the synthetic excitation draw (``systems.bench.synthetic_ci``).
+    """
     if name in MOLECULES:
         from repro.systems import molecule as mol
         fn = {'h': mol.hydrogen, 'h2': mol.h2, 'heh+': mol.heh_plus,
               'water': mol.water}[name]
-        return mol.build_wavefunction(*fn())
+        m, shells = fn()
+        if n_det <= 1:
+            return mol.build_wavefunction(m, shells)
+        from repro.core.basis import build_basis
+        from repro.systems.bench import synthetic_ci
+        n_ao = build_basis(shells, m.coords.shape[0]).n_ao
+        n_orb = min(n_ao, max(m.n_up, m.n_dn) + 6)
+        ci = synthetic_ci(m.n_up, m.n_dn, n_orb, n_det, seed=ci_seed)
+        return mol.build_wavefunction(m, shells, n_orb=n_orb, ci=ci)
     from repro.systems.bench import build_bench_wavefunction, paper_system
-    return build_bench_wavefunction(paper_system(name), method='sparse')
+    return build_bench_wavefunction(paper_system(name), method='sparse',
+                                    n_det=n_det, ci_seed=ci_seed)
 
 
 __all__ = ['MOLECULES', 'build_system']

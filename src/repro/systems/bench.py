@@ -248,18 +248,110 @@ def paper_system(name: str) -> BenchSystem:
     return make_bench_system(name, **PAPER_SYSTEMS[name])
 
 
+def synthetic_ci(n_up: int, n_dn: int, n_orb: int, n_det: int,
+                 seed: int = 0, max_exc: int = 2):
+    """Synthetic CI expansion: reference + random singles/doubles.
+
+    The multidet analogue of ``_localized_mos``: no real CI coefficient
+    files ship offline, so benchmark/CLI runs get a seeded expansion with
+    the right *shape* — ``n_det`` determinants (the knob of Table X and
+    ``qmc_run --n-det``), excitation rank <= ``max_exc``, and CI
+    coefficients decaying from a dominant reference like a truncated-CI
+    spectrum.  Excitations are sampled without replacement over both spin
+    blocks; raises if the single/double space cannot host ``n_det``
+    determinants (grow ``n_orb``).
+    """
+    from repro.core.multidet import from_excitations
+
+    n_virt_up, n_virt_dn = n_orb - n_up, n_orb - n_dn
+    rng = np.random.default_rng(seed + 7 * n_det)
+    seen, excitations = set(), []
+    attempts = 0
+    while len(excitations) < n_det - 1:
+        attempts += 1
+        if attempts > 200 * n_det:
+            raise ValueError(
+                f'cannot draw {n_det - 1} distinct excitations from '
+                f'n_orb={n_orb} (n_up={n_up}, n_dn={n_dn}); '
+                f'increase the orbital set')
+        kinds = ['su'] * (n_virt_up > 0) + ['sd'] * (n_dn and n_virt_dn > 0)
+        if max_exc >= 2:
+            kinds += (['du'] * (n_up >= 2 and n_virt_up >= 2)
+                      + ['dd'] * (n_dn >= 2 and n_virt_dn >= 2)
+                      + ['ss'] * (n_dn and n_virt_up > 0 and n_virt_dn > 0))
+        if not kinds:
+            raise ValueError(
+                f'cannot draw any excitation from n_orb={n_orb} '
+                f'(n_up={n_up}, n_dn={n_dn}): no virtual orbitals; '
+                f'increase the orbital set')
+        kind = kinds[rng.integers(len(kinds))]
+
+        def _draw(n_occ, n_virt, deg):
+            holes = sorted(rng.choice(n_occ, deg, replace=False).tolist())
+            parts = sorted((n_occ + rng.choice(n_virt, deg, replace=False)
+                            ).tolist())
+            return holes, parts
+
+        up, dn = ([], []), ([], [])
+        if kind == 'su':
+            up = _draw(n_up, n_virt_up, 1)
+        elif kind == 'sd':
+            dn = _draw(n_dn, n_virt_dn, 1)
+        elif kind == 'du':
+            up = _draw(n_up, n_virt_up, 2)
+        elif kind == 'dd':
+            dn = _draw(n_dn, n_virt_dn, 2)
+        else:                                  # 'ss': single x single
+            up = _draw(n_up, n_virt_up, 1)
+            dn = _draw(n_dn, n_virt_dn, 1)
+        key = (tuple(up[0]), tuple(up[1]), tuple(dn[0]), tuple(dn[1]))
+        if key in seen:
+            continue
+        seen.add(key)
+        excitations.append((up, dn))
+    i = np.arange(1, n_det)
+    signs = rng.choice([-1.0, 1.0], n_det - 1)
+    coeffs = np.concatenate([[1.0], signs * 0.3 / (1.0 + 0.05 * i)])
+    return from_excitations(coeffs, excitations, n_up, n_dn, n_orb)
+
+
+def extend_mos_virtual(sys: BenchSystem, n_virt: int,
+                       loc_length: float = 5.0,
+                       seed: int = 1234) -> np.ndarray:
+    """Stack ``n_virt`` extra localized virtual-orbital rows onto the
+    occupied A matrix (same envelope generator, independent stream) —
+    the orbital pool multideterminant expansions excite into."""
+    rng = np.random.default_rng(seed)
+    extra = _localized_mos(rng, sys.basis, sys.mol.coords, n_virt,
+                           loc_length)
+    return np.concatenate([sys.mos, extra], axis=0)
+
+
 def build_bench_wavefunction(sys: BenchSystem, method: str = 'sparse',
-                             k_max: int = 512):
-    """(config, params) for a BenchSystem — MOs are the generated A matrix."""
+                             k_max: int = 512, n_det: int = 1,
+                             ci_seed: int = 0):
+    """(config, params) for a BenchSystem — MOs are the generated A matrix.
+
+    ``n_det > 1`` attaches a ``synthetic_ci`` expansion (and the virtual
+    MO rows it excites into) to the config — the Table X / ``--n-det``
+    multideterminant path.
+    """
     import jax.numpy as jnp
     from repro.core.jastrow import default_params
     from repro.core.wavefunction import WavefunctionConfig, WavefunctionParams
+    mos, ci = sys.mos, None
+    if n_det > 1:
+        n_virt = min(sys.basis.n_ao - sys.mol.n_up,
+                     max(8, sys.mol.n_up // 2))
+        mos = extend_mos_virtual(sys, n_virt)
+        ci = synthetic_ci(sys.mol.n_up, sys.mol.n_dn, mos.shape[0],
+                          n_det, seed=ci_seed)
     cfg = WavefunctionConfig(
         basis=sys.basis, n_up=sys.mol.n_up, n_dn=sys.mol.n_dn,
-        k_max=k_max, shared_orbitals=True, method=method)
+        k_max=k_max, shared_orbitals=True, method=method, ci=ci)
     params = WavefunctionParams(
         coords=jnp.asarray(sys.mol.coords, jnp.float32),
         charges=jnp.asarray(sys.mol.charges, jnp.float32),
-        mo=jnp.asarray(sys.mos),
+        mo=jnp.asarray(mos),
         jastrow=default_params())
     return cfg, params

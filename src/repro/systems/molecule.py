@@ -81,16 +81,28 @@ def water() -> tuple[Molecule, list[Shell]]:
 def build_wavefunction(mol: Molecule, shells, k_max: int = 0,
                        method: str = 'dense', jastrow: JastrowParams = None,
                        mos: np.ndarray = None,
-                       ns_steps: int = 1):
-    """Assemble (config, params). MOs default to core-Hamiltonian guess."""
+                       ns_steps: int = 1, n_orb: int = 0,
+                       ci=None):
+    """Assemble (config, params). MOs default to core-Hamiltonian guess.
+
+    ``n_orb`` requests that many MO rows (0: just the occupied set) —
+    multideterminant expansions need virtual orbitals too; ``ci`` is an
+    optional ``multidet.MultiDetWavefunction`` stored on the config (its
+    ``n_orb`` must match the MO rows).
+    """
     bas = build_basis(shells, mol.coords.shape[0])
-    n_orb = max(mol.n_up, mol.n_dn)
+    n_orb = max(n_orb, mol.n_up, mol.n_dn)
+    if n_orb > bas.n_ao:
+        raise ValueError(f'{n_orb} MOs requested from {bas.n_ao} AOs')
     if mos is None:
         from repro.core.integrals import core_guess_mos
         mos = core_guess_mos(bas, mol.coords, mol.charges, n_orb)
+    if ci is not None and ci.n_orb != np.asarray(mos).shape[0]:
+        raise ValueError(f'CI expansion indexes {ci.n_orb} orbitals but '
+                         f'params.mo has {np.asarray(mos).shape[0]} rows')
     cfg = WavefunctionConfig(
         basis=bas, n_up=mol.n_up, n_dn=mol.n_dn, k_max=k_max,
-        shared_orbitals=True, method=method, ns_steps=ns_steps)
+        shared_orbitals=True, method=method, ns_steps=ns_steps, ci=ci)
     params = WavefunctionParams(
         coords=jnp.asarray(mol.coords, jnp.float32),
         charges=jnp.asarray(mol.charges, jnp.float32),

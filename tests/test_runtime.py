@@ -326,15 +326,15 @@ def test_crash_mid_block_flushes_nothing():
     assert abs(avg.energy - (-3.0)) < 0.3
 
 
-def test_runconfig_shim_constructs_manager():
-    """One-release compat: RunConfig warns but still builds a working
-    manager (converted to RunControl + ThreadBackend)."""
-    with pytest.deprecated_call():
-        from repro.runtime import RunConfig
-        cfg = RunConfig(n_workers=2, max_blocks=6, poll_interval=0.02)
-    mgr = QMCManager(FakeSampler(), 'k9', cfg)
-    assert isinstance(mgr.backend, ThreadBackend)
+def test_runconfig_shim_removed():
+    """The PR-4 one-release ``RunConfig`` deprecation shim is gone: run
+    control is ``RunControl`` + an ``ExecutorBackend`` (or a declarative
+    ``launch.spec.RunSpec``)."""
+    import repro.runtime as rt
+    assert not hasattr(rt, 'RunConfig')
+    mgr = QMCManager(FakeSampler(), 'k9',
+                     rt.RunControl(max_blocks=6, poll_interval=0.02),
+                     backend=ThreadBackend(2))
     assert mgr.backend.n_workers == 2
-    assert mgr.control.max_blocks == 6
     avg = mgr.run()
     assert avg.n_blocks >= 6

@@ -1,0 +1,75 @@
+"""Docs lint: every local link and code path in the docs must resolve.
+
+Checks (CI quick-tier step, also runnable locally):
+
+* markdown links ``[text](target)`` in README.md, DESIGN.md, ROADMAP.md,
+  benchmarks/README.md and docs/*.md — relative targets must exist
+  (``http(s)``/anchors are skipped);
+* path-like inline-code references (`` `src/repro/...` ``, `` `tests/...``,
+  `` `benchmarks/...` ``, `` `docs/...` ``, `` `tools/...` ``) — the file
+  or directory must exist, so the paper-to-code map can never rot;
+* dotted module references `` `repro.x.y` `` in docs/PAPER_MAP.md must
+  resolve to a module file or package directory under src/.
+
+Exit code 1 with a per-failure listing when anything dangles.
+
+    python tools/docs_lint.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+DOC_FILES = ['README.md', 'DESIGN.md', 'ROADMAP.md', 'benchmarks/README.md',
+             'CHANGES.md']
+
+LINK_RE = re.compile(r'\[[^\]]*\]\(([^)#][^)]*)\)')
+CODEPATH_RE = re.compile(
+    r'`((?:src/repro|tests|benchmarks|docs|tools|examples)/[\w./-]+)`')
+MODULE_RE = re.compile(r'`(repro(?:\.\w+)+)`')
+
+
+def _check_file(md: Path, failures: list[str]) -> None:
+    text = md.read_text()
+    base = md.parent
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).split('#', 1)[0].strip()
+        if not target or target.startswith(('http://', 'https://',
+                                            'mailto:')):
+            continue
+        if not ((base / target).exists() or (ROOT / target).exists()):
+            failures.append(f'{md.relative_to(ROOT)}: dangling link '
+                            f'({m.group(1)})')
+    for m in CODEPATH_RE.finditer(text):
+        target = m.group(1).rstrip('.')
+        if not (ROOT / target).exists():
+            failures.append(f'{md.relative_to(ROOT)}: missing path '
+                            f'`{target}`')
+    if md.name == 'PAPER_MAP.md':
+        for m in MODULE_RE.finditer(text):
+            rel = m.group(1).replace('.', '/')
+            if not ((ROOT / 'src' / (rel + '.py')).exists()
+                    or (ROOT / 'src' / rel).is_dir()):
+                failures.append(f'{md.relative_to(ROOT)}: unresolvable '
+                                f'module `{m.group(1)}`')
+
+
+def main() -> int:
+    """Scan the doc set; print failures; 0 = clean."""
+    files = [ROOT / f for f in DOC_FILES if (ROOT / f).exists()]
+    files += sorted((ROOT / 'docs').glob('*.md'))
+    failures: list[str] = []
+    for md in files:
+        _check_file(md, failures)
+    for f in failures:
+        print(f'DOCS-LINT: {f}')
+    print(f'docs-lint: {len(files)} files checked, '
+          f'{len(failures)} failures')
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())
