@@ -15,7 +15,9 @@ inverse updates) against per-move full recompute and the all-electron
 propagator; Table IX is the backend parallel-efficiency table (thread vs
 process workers, steady-state blocks/s from stored block timestamps);
 Table X is the multideterminant ratio benchmark (shared-inverse SMW
-tables vs per-determinant slogdet at n_det = 1..1000).
+tables vs per-determinant slogdet at n_det = 1..1000); Table XI is the
+TCP grid-backend efficiency table (localhost qmc_worker subprocesses over
+sockets vs thread/process at equal worker counts).
 TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
@@ -38,7 +40,7 @@ from benchmarks import tables as T
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII,IX,X')
+    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -48,7 +50,7 @@ def main(argv=None) -> int:
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
            'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
            'VIII': T.table_sem, 'IX': T.table_runtime,
-           'X': T.table_multidet}
+           'X': T.table_multidet, 'XI': T.table_grid}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

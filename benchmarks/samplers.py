@@ -4,17 +4,17 @@ Kept out of ``benchmarks.tables`` (which imports jax at module level) so
 ProcessBackend worker children — which import the sampler's module to
 unpickle it — boot in ~0.3 s instead of paying the multi-second jax
 import for a sampler that never touches it.
+
+The implementation is ``repro.runtime.testing.GaussianSampler`` (the same
+sleep-bound drill sampler the grid worker CLI exposes as ``--sampler
+gauss``); this module pins the benchmark-friendly defaults.
 """
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
-from repro.runtime.blocks import BlockAccumulator
+from repro.runtime.testing import GaussianSampler
 
 
-class RuntimeBenchSampler:
+class RuntimeBenchSampler(GaussianSampler):
     """Sleep-bound fake sampler for backend-scaling runs.
 
     Models the GIL-free XLA compute of a real worker with a fixed-cost
@@ -22,17 +22,4 @@ class RuntimeBenchSampler:
     """
 
     def __init__(self, true_energy=-3.0, sigma=0.5, delay=0.01):
-        self.mu, self.sigma, self.delay = true_energy, sigma, delay
-
-    def init_state(self, worker_id, seed, walkers=None):
-        return {'rng': np.random.default_rng([seed, worker_id])}
-
-    def set_e_trial(self, state, e_trial):
-        return state
-
-    def run_subblock(self, state, step):
-        time.sleep(self.delay)
-        e = state['rng'].normal(self.mu, self.sigma, size=64)
-        acc = BlockAccumulator(weight=float(e.size), e_mean=float(e.mean()),
-                               e2_mean=float((e ** 2).mean()))
-        return state, acc, state['rng'].normal(size=(8, 2, 3)), e[:8]
+        super().__init__(true_energy=true_energy, sigma=sigma, delay=delay)

@@ -282,6 +282,63 @@ def table_runtime(quick=True):
 
 
 # ---------------------------------------------------------------------------
+# Table XI: parallel efficiency of the TCP grid backend vs thread/process
+# ---------------------------------------------------------------------------
+def table_grid(quick=True):
+    """Localhost-grid parallel efficiency (paper's multi-host deployment).
+
+    The same fixed-cost sampler workload on three substrates — in-process
+    threads, OS processes, and the TCP ``GridBackend`` with real
+    ``qmc_worker`` subprocess workers (heartbeats + binary packets over
+    sockets).  Rates are steady-state (from stored block timestamps, so
+    subprocess boot is excluded); ``efficiency`` is relative to each
+    backend's own 1-worker rate and ``vs_thread`` compares substrates at
+    equal worker count — the gap is the full wire-protocol cost
+    (encode + TCP + CRC + decode per block packet).
+    """
+    from benchmarks.samplers import RuntimeBenchSampler
+    from repro.runtime import (GridBackend, GridConfig, QMCManager,
+                               RunControl, make_backend)
+
+    delay = 0.01
+    per_worker_blocks = 20 if quick else 50
+    counts = [1, 2, 4] if quick else [1, 2, 4, 8]
+    rows = []
+    thread_rates = {}
+    for backend_name in ('thread', 'process', 'grid'):
+        base = None
+        for n in counts:
+            key = f'tab11-{backend_name}-{n}'
+            ctl = RunControl(max_blocks=per_worker_blocks * n,
+                             poll_interval=0.05, subblocks_per_block=2)
+            if backend_name == 'grid':
+                # workers are real qmc_worker subprocesses building the
+                # same gauss sampler locally from CLI flags
+                backend = GridBackend(n, net=GridConfig(worker_args=(
+                    '--sampler', f'gauss:delay={delay}')))
+            else:
+                backend = make_backend(backend_name, n)
+            mgr = QMCManager(RuntimeBenchSampler(delay=delay), key, ctl,
+                             backend=backend)
+            avg = mgr.run()
+            ts = sorted(b.timestamp for b in mgr.db.blocks(key))
+            span = ts[-1] - ts[0]
+            rate = (len(ts) - 1) / span if span > 0 else float('nan')
+            if base is None:
+                base = rate
+            if backend_name == 'thread':
+                thread_rates[n] = rate
+            row = dict(table='XI', backend=backend_name, workers=n,
+                       blocks=avg.n_blocks, blocks_per_s=round(rate, 1),
+                       speedup=round(rate / base, 2),
+                       efficiency=round(rate / base / n, 3))
+            if backend_name != 'thread' and thread_rates.get(n):
+                row['vs_thread'] = round(rate / thread_rates[n], 2)
+            rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Table VI: ensemble-flattened vs per-walker-vmap psi evaluation
 # ---------------------------------------------------------------------------
 def table_ensemble(quick=True):

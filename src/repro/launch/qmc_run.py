@@ -11,7 +11,11 @@ substrate (paper §V: "all kinds of computational platforms"):
 * ``process`` — one OS process per worker, pickled block packets pumped
   into the forwarder tree (real isolation, true multi-core);
 * ``sim``     — deterministic simulated grid (``--sim-latency``,
-  ``--sim-drop``) for fault-tolerance drills.
+  ``--sim-drop``) for fault-tolerance drills;
+* ``grid``    — real multi-host TCP grid: the manager listens on
+  ``--listen HOST:PORT`` and workers (localhost subprocesses by default,
+  or remote ``python -m repro.launch.qmc_worker --connect HOST:PORT``)
+  attach with heartbeats, reconnect backoff, and work stealing.
 
 ``--method vmc|dmc|sem-vmc`` selects the propagator plug-in; ``--shards N``
 shards each worker's walker axis over N local devices (DESIGN.md §5).  The
@@ -27,7 +31,7 @@ from __future__ import annotations
 
 import argparse
 
-from repro.launch.spec import RunSpec, SimGridConfig, build_run
+from repro.launch.spec import GridConfig, RunSpec, SimGridConfig, build_run
 
 
 def parse_spec(argv=None) -> RunSpec:
@@ -41,7 +45,8 @@ def parse_spec(argv=None) -> RunSpec:
                     help='CI expansion size (1: single determinant; >1: '
                          'synthetic multideterminant wavefunction, all '
                          'ratios off the shared reference inverse)')
-    ap.add_argument('--backend', choices=('thread', 'process', 'sim'),
+    ap.add_argument('--backend',
+                    choices=('thread', 'process', 'sim', 'grid'),
                     default='thread',
                     help='execution substrate for the workers')
     ap.add_argument('--workers', type=int, default=2)
@@ -64,7 +69,20 @@ def parse_spec(argv=None) -> RunSpec:
                     help='[sim backend] seconds per worker->tree send')
     ap.add_argument('--sim-drop', type=float, default=0.0,
                     help='[sim backend] per-packet loss probability')
+    ap.add_argument('--listen', default='127.0.0.1:0', metavar='HOST:PORT',
+                    help='[grid backend] TCP listen address for workers '
+                         '(port 0: ephemeral, printed at startup; use '
+                         '0.0.0.0:PORT to accept remote hosts)')
+    ap.add_argument('--no-local-workers', action='store_true',
+                    help='[grid backend] do not spawn localhost workers; '
+                         'wait for remote qmc_worker processes to attach '
+                         '(elastic join)')
+    ap.add_argument('--heartbeat-timeout', type=float, default=2.0,
+                    help='[grid backend] silence after which a worker is '
+                         'declared dead (its lease is re-queued)')
     args = ap.parse_args(argv)
+    from repro.launch.qmc_worker import parse_address
+    host, port = parse_address(args.listen)
     return RunSpec(
         system=args.system, method=args.method, n_det=args.n_det,
         tau=args.tau,
@@ -72,6 +90,9 @@ def parse_spec(argv=None) -> RunSpec:
         shards=args.shards, backend=args.backend, n_workers=args.workers,
         grid=SimGridConfig(latency=args.sim_latency, drop_rate=args.sim_drop,
                            seed=args.seed),
+        net=GridConfig(host=host, port=port,
+                       heartbeat_timeout=args.heartbeat_timeout,
+                       local_workers=not args.no_local_workers),
         max_blocks=args.blocks, target_error=args.target_error,
         wall_clock_limit=args.wall_clock, db=args.db, seed=args.seed)
 
@@ -84,6 +105,10 @@ def main(argv=None):
           f'method={spec.method} backend={spec.backend}: '
           f'{spec.n_workers} workers x {spec.n_walkers} walkers'
           + (f' x {spec.shards} shards' if spec.shards > 1 else ''))
+    if spec.backend == 'grid':
+        host, port = run.backend.address
+        print(f'grid listening on {host}:{port} — attach workers with: '
+              f'python -m repro.launch.qmc_worker --connect {host}:{port}')
     avg = run.run()
     for err in run.worker_errors():
         print('WORKER ERROR:\n', err)

@@ -25,8 +25,9 @@ import dataclasses
 
 import numpy as np
 
-from repro.runtime import (QMCManager, ResultDatabase, RunControl,
-                           SimGridConfig, critical_data_key, make_backend)
+from repro.runtime import (GridConfig, QMCManager, ResultDatabase,
+                           RunControl, SimGridConfig, critical_data_key,
+                           make_backend)
 from repro.runtime.samplers import BlockSampler
 from repro.systems import build_system
 
@@ -34,7 +35,7 @@ from repro.systems import build_system
 # spec construction/validation stays jax-import-free (the registry itself
 # is consulted lazily for tau defaults and propagator construction)
 METHODS = ('vmc', 'dmc', 'sem-vmc')
-BACKEND_NAMES = ('thread', 'process', 'sim')
+BACKEND_NAMES = ('thread', 'process', 'sim', 'grid')
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +44,8 @@ class RunSpec:
 
     Everything ``build_run`` needs; substrate-independent by construction.
     ``tau=0`` means the method default (0.3 VMC / sem-vmc proposal width,
-    0.02 DMC).  ``grid`` only applies to ``backend='sim'``.
+    0.02 DMC).  ``grid`` only applies to ``backend='sim'``; ``net`` (TCP
+    listen address + heartbeat/rebalance policy) only to ``backend='grid'``.
     """
 
     # physics: system + wavefunction + propagator choice
@@ -64,10 +66,11 @@ class RunSpec:
     shards: int = 1                  # local devices per worker ensemble
 
     # resources (the platform axis)
-    backend: str = 'thread'          # thread | process | sim
+    backend: str = 'thread'          # thread | process | sim | grid
     n_workers: int = 2
     subblocks_per_block: int = 4
     grid: SimGridConfig = dataclasses.field(default_factory=SimGridConfig)
+    net: GridConfig = dataclasses.field(default_factory=GridConfig)
 
     # stopping criteria
     max_blocks: int = 20
@@ -87,10 +90,11 @@ class RunSpec:
         if self.backend not in BACKEND_NAMES:
             raise ValueError(f'unknown backend {self.backend!r} '
                              f'(choose from {BACKEND_NAMES})')
-        if self.shards > 1 and self.backend == 'process':
+        if self.shards > 1 and self.backend in ('process', 'grid'):
             raise ValueError(
                 'shards > 1 requires the thread or sim backend: a device '
-                'mesh cannot be shipped to worker processes')
+                'mesh cannot be shipped to worker processes or across '
+                'grid hosts')
         if self.n_det < 1:
             raise ValueError(f'n_det must be >= 1, got {self.n_det}')
 
@@ -180,7 +184,17 @@ def build_run(spec: RunSpec) -> QMCRun:
                          poll_interval=spec.poll_interval,
                          subblocks_per_block=spec.subblocks_per_block,
                          e_trial_feedback=(spec.method == 'dmc'))
-    backend = make_backend(spec.backend, spec.n_workers, grid=spec.grid)
+    backend = make_backend(spec.backend, spec.n_workers, grid=spec.grid,
+                           net=spec.net)
+    if spec.backend == 'grid':
+        # declarative run payload: grid workers rebuild this sampler on
+        # their own host from these fields (see qmc_worker
+        # .sampler_from_payload) — nothing jit-compiled crosses the wire
+        backend.set_run_payload(dict(
+            system=spec.system, method=spec.method, n_det=spec.n_det,
+            ci_seed=spec.seed, tau=tau, e_trial=spec.e_trial,
+            equil_steps=spec.equil_steps, n_walkers=spec.n_walkers,
+            steps=spec.steps))
     mgr = QMCManager(sampler, run_key, control, db=db, seed=spec.seed,
                      backend=backend, n_kept=spec.n_kept)
     return QMCRun(spec=spec, run_key=run_key, cfg=cfg, params=params,

@@ -21,11 +21,13 @@ device group; the forwarder tree spans hosts over TCP exactly as in the
 paper.  Here the *execution substrate* is a pluggable ``ExecutorBackend``
 (runtime.backends): in-process threads (default; the samplers release the
 GIL inside XLA), separate OS processes shipping pickled block packets
-(real isolation, true multi-core), or a deterministic simulated grid with
-injectable latency / packet drop / node failure for chaos drills — the
-protocol, fault paths, and unbiasedness contract are identical across all
-three and are what the tests exercise.  The declarative front door is
-``launch.spec.RunSpec`` -> ``build_run``.
+(real isolation, true multi-core), a deterministic simulated grid with
+injectable latency / packet drop / node failure for chaos drills, or a
+real multi-host TCP grid (``runtime.grid``) where remote hosts attach
+``launch.qmc_worker`` processes with heartbeats, reconnect backoff, and
+work stealing — the protocol, fault paths, and unbiasedness contract are
+identical across all four and are what the tests exercise.  The
+declarative front door is ``launch.spec.RunSpec`` -> ``build_run``.
 """
 from repro.runtime.backends import (BACKENDS, ExecutorBackend,
                                     ProcessBackend, SimGridBackend,
@@ -35,12 +37,14 @@ from repro.runtime.blocks import (BlockAccumulator, BlockResult,
                                   combine_blocks)
 from repro.runtime.database import ResultDatabase, critical_data_key
 from repro.runtime.forwarder import Forwarder, build_tree
+from repro.runtime.grid import GridBackend, GridConfig, GridWorkerClient
 from repro.runtime.manager import QMCManager, RunControl
 from repro.runtime.reservoir import WalkerReservoir
 
 __all__ = [
     'BACKENDS', 'BlockAccumulator', 'BlockResult', 'combine_blocks',
-    'ExecutorBackend', 'Forwarder', 'ProcessBackend', 'QMCManager',
+    'ExecutorBackend', 'Forwarder', 'GridBackend', 'GridConfig',
+    'GridWorkerClient', 'ProcessBackend', 'QMCManager',
     'ResultDatabase', 'RunControl', 'SimGridBackend',
     'SimGridConfig', 'ThreadBackend', 'WalkerReservoir', 'WorkerHandle',
     'build_tree', 'critical_data_key', 'make_backend',

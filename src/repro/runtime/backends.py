@@ -8,7 +8,8 @@ workers on some substrate, and ``QMCManager`` is written purely against the
 backend interface — elastic scaling, E_T feedback, and the termination /
 drain walk are uniform across substrates.
 
-Three substrates ship:
+Four substrates ship (the fourth, the real multi-host TCP ``GridBackend``,
+lives in ``runtime.grid`` and registers here under ``'grid'``):
 
 * ``ThreadBackend``   — workers are daemon threads in this process (the
   samplers release the GIL inside XLA).  The default; identical to the
@@ -18,6 +19,9 @@ Three substrates ship:
   block loop and ships zlib-compressed pickled block packets through a
   per-worker queue; a host-side pump thread routes them into the forwarder
   tree.  Real isolation, true multi-core: a ``crash()`` is a SIGKILL.
+* ``GridBackend``     — (runtime.grid) real multi-host workers over TCP:
+  heartbeats, exponential-backoff reconnect, elastic join/leave, and
+  rate-proportional sub-block leases with work stealing.
 * ``SimGridBackend``  — a deterministic *simulated* distributed grid:
   thread workers whose links to the forwarder tree are wrapped in lossy,
   latent ``SimChannel``s (seeded per-channel RNG for packet drop), plus a
@@ -214,6 +218,7 @@ class ProcessWorkerHandle:
         self.ready = False             # child finished its (slow) boot
         self.blocks_done = 0
         self.packets_corrupt = 0       # dropped undecodable packets
+        self.spawn_attempts: list[str] = []   # failed-then-retried spawns
 
     @property
     def running(self) -> bool:
@@ -274,6 +279,39 @@ class ProcessWorkerHandle:
         return n
 
 
+class FailedSpawnHandle:
+    """WorkerHandle for a worker that never came up (spawn exhausted).
+
+    Keeps the manager's uniform bookkeeping: the handle is present (so
+    ``worker_errors`` can report the attempt history) but never running,
+    so the run proceeds on the workers that did spawn.
+    """
+
+    def __init__(self, worker_id: int, attempts: list[str],
+                 init_walkers=None):
+        self.worker_id = worker_id
+        self.init_walkers = init_walkers
+        self.spawn_attempts = list(attempts)
+        self.error = (f'spawn failed after {len(attempts)} attempts: '
+                      f'{attempts[-1] if attempts else "?"}')
+
+    @property
+    def running(self) -> bool:
+        return False
+
+    def stop(self) -> None:
+        pass
+
+    def crash(self) -> None:
+        pass
+
+    def join(self, timeout: float = 10.0) -> None:
+        pass
+
+    def send_e_trial(self, e_trial: float) -> None:
+        pass
+
+
 class ProcessBackend:
     """Workers as separate OS processes; packets pumped into the tree.
 
@@ -281,30 +319,61 @@ class ProcessBackend:
     must be shipped *before* any host-side jit compilation — the
     ``EnsembleDriver`` drops its compiled-block cache on pickling, and a
     device-mesh sampler refuses to pickle (shard on the host instead).
+
+    Spawning retries with exponential backoff (transient fork/exec
+    failures — EAGAIN under process-count pressure — are the norm on
+    loaded batch nodes, not the exception); the per-attempt failure
+    history is kept on the handle and surfaced through
+    ``QMCManager.worker_errors()``.
     """
 
     name = 'process'
 
-    def __init__(self, n_workers: int = 4, start_method: str = 'spawn'):
+    def __init__(self, n_workers: int = 4, start_method: str = 'spawn',
+                 spawn_retries: int = 3, spawn_backoff: float = 0.05):
         self.n_workers = int(n_workers)
         self._ctx = mp.get_context(start_method)
+        self.spawn_retries = int(spawn_retries)
+        self.spawn_backoff = float(spawn_backoff)
         self.handles: list[ProcessWorkerHandle] = []
         self._pump_thread: threading.Thread | None = None
         self._pump_done = threading.Event()
 
     def spawn(self, worker_id: int, sampler: Sampler, run_key: str,
               forwarder: Forwarder, *, seed: int, subblocks_per_block: int,
-              init_walkers=None, job: str = '') -> ProcessWorkerHandle:
-        up_q = self._ctx.Queue()
-        ctrl_q = self._ctx.Queue()
-        proc = self._ctx.Process(
-            target=_process_worker_main,
-            args=(worker_id, sampler, run_key, seed, subblocks_per_block,
-                  init_walkers, job, up_q, ctrl_q),
-            daemon=True)
-        proc.start()
+              init_walkers=None, job: str = ''):
+        attempts: list[str] = []
+        delay = self.spawn_backoff
+        proc = up_q = ctrl_q = None
+        for _ in range(self.spawn_retries + 1):
+            try:
+                up_q = self._ctx.Queue()
+                ctrl_q = self._ctx.Queue()
+                proc = self._ctx.Process(
+                    target=_process_worker_main,
+                    args=(worker_id, sampler, run_key, seed,
+                          subblocks_per_block, init_walkers, job, up_q,
+                          ctrl_q),
+                    daemon=True)
+                proc.start()
+                break
+            except Exception as e:
+                attempts.append(f'{type(e).__name__}: {e}')
+                proc = None
+                for q in (up_q, ctrl_q):
+                    if q is not None:
+                        try:
+                            q.close()
+                        except (OSError, ValueError):
+                            pass
+                up_q = ctrl_q = None
+                time.sleep(delay)
+                delay *= 2                     # exponential backoff
+        if proc is None:                       # retries exhausted
+            return FailedSpawnHandle(worker_id, attempts, init_walkers)
         h = ProcessWorkerHandle(worker_id, proc, up_q, ctrl_q, forwarder,
                                 init_walkers)
+        h.spawn_attempts = attempts            # non-empty iff retried
         self.handles.append(h)
         if self._pump_thread is None:
             self._pump_thread = threading.Thread(target=self._pump_loop,
@@ -446,16 +515,29 @@ class SimGridBackend:
         return sum(c.dropped for c in self.channels.values())
 
 
+def _make_grid(n_workers, net=None):
+    """Lazy GridBackend factory (keeps this module socket-free)."""
+    from repro.runtime.grid import GridBackend
+    return GridBackend(n_workers, net=net)
+
+
 BACKENDS = {'thread': ThreadBackend, 'process': ProcessBackend,
-            'sim': SimGridBackend}
+            'sim': SimGridBackend, 'grid': _make_grid}
 
 
 def make_backend(name: str, n_workers: int,
-                 grid: SimGridConfig | None = None) -> ExecutorBackend:
-    """Backend factory for the string names the CLI / RunSpec use."""
+                 grid: SimGridConfig | None = None,
+                 net=None) -> ExecutorBackend:
+    """Backend factory for the string names the CLI / RunSpec use.
+
+    ``grid`` configures the *simulated* grid substrate; ``net`` (a
+    ``runtime.grid.GridConfig``) configures the real TCP grid backend.
+    """
     if name not in BACKENDS:
         raise ValueError(f'unknown backend {name!r} '
                          f'(choose from {sorted(BACKENDS)})')
     if name == 'sim':
         return SimGridBackend(n_workers, grid=grid)
+    if name == 'grid':
+        return _make_grid(n_workers, net=net)
     return BACKENDS[name](n_workers)

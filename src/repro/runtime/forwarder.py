@@ -4,8 +4,12 @@ Each compute node runs one forwarder; forwarders form a binary tree rooted
 at the data server.  Results flow *up*: a forwarder batches the messages of
 its workers and descendants into one compressed packet and pushes it to its
 parent — or, if the parent is dead/unreachable, to any live *ancestor*
-(redundancy against node failure).  Packets are zlib-compressed pickles of
-block lists (the paper compresses all transfers).
+(redundancy against node failure).  Packets are the CRC-validated binary
+frames of ``runtime.packets`` (the same wire format the TCP grid backend
+ships between hosts); ``submit_packet`` rejects a corrupt frame — bad CRC,
+bad magic — at ingress without ever killing the forwarder thread, and the
+unbiasedness contract (a dropped block was never counted) makes the
+rejection safe.
 
 A forwarder also maintains a walker reservoir; after a random idle timeout
 it pushes the reservoir up the tree, where it is merged — so the data server
@@ -14,16 +18,16 @@ every walker travelling to the root.
 """
 from __future__ import annotations
 
-import pickle
 import queue
 import threading
 import time
-import zlib
 
 import numpy as np
 
 from repro.runtime.blocks import BlockResult
 from repro.runtime.database import ResultDatabase
+from repro.runtime.packets import (BLOCKS, PacketError, decode_blocks,
+                                   encode_blocks, frame, unframe)
 from repro.runtime.reservoir import WalkerReservoir
 
 
@@ -46,6 +50,7 @@ class Forwarder:
         self._thread: threading.Thread | None = None
         self.packets_sent = 0
         self.bytes_sent = 0
+        self.packets_corrupt = 0       # rejected at ingress (bad CRC/frame)
 
     # -- wiring -------------------------------------------------------------
     def set_parent_chain(self, ancestors: list['Forwarder']) -> None:
@@ -75,10 +80,23 @@ class Forwarder:
         return True
 
     def submit_packet(self, payload: bytes) -> bool:
-        """Compressed packet from a child forwarder."""
+        """Framed packet from a child forwarder (CRC-checked at ingress).
+
+        A corrupt frame — truncated, bit-flipped, wrong magic — is
+        *rejected* (counted, never enqueued): one bad packet must not kill
+        the forwarder thread every descendant shares, and the dropped
+        blocks were never counted, so the average stays unbiased.
+        """
         if not self.alive:
             return False
-        self._q.put(('packet', payload))
+        try:
+            kind, body = unframe(payload)
+            if kind != BLOCKS:
+                raise PacketError(f'unexpected frame kind {kind}')
+        except PacketError:
+            self.packets_corrupt += 1
+            return False
+        self._q.put(('packet', body))
         return True
 
     # -- egress -------------------------------------------------------------
@@ -86,7 +104,8 @@ class Forwarder:
         if self.db is not None:                      # root: store directly
             self.db.append(blocks)
             return
-        payload = zlib.compress(pickle.dumps(blocks))  # paper: zlib transfers
+        # the paper's compressed transfer, as a CRC-framed binary packet
+        payload = frame(BLOCKS, encode_blocks(blocks))
         self.packets_sent += 1
         self.bytes_sent += len(payload)
         for anc in self.ancestors:                   # parent, then fallbacks
@@ -126,7 +145,11 @@ class Forwarder:
             if kind == 'blocks':
                 pending.extend(item)
             elif kind == 'packet':
-                pending.extend(pickle.loads(zlib.decompress(item)))
+                try:
+                    pending.extend(decode_blocks(item))
+                except Exception:      # defense in depth: ingress already
+                    self.packets_corrupt += 1   # CRC-checked this frame
+
             elif kind == 'walkers':
                 self.reservoir.add(*item)
             now = time.monotonic()

@@ -74,6 +74,10 @@ class QMCManager:
         self._seed = seed
         self._next_worker_id = 0
         self._t0 = time.monotonic()
+        # tick-driven liveness journal: backends report joins, deaths,
+        # reconnects, and stolen leases here (grid elasticity makes the
+        # roster a time series, not a constant)
+        self.events: list[tuple[float, str, int, str]] = []
         # unique job identity: lets independent clusters / restarted runs
         # write the same (worker, block) counters without key collisions,
         # while true replays (merging the same DB twice) still dedupe.
@@ -157,8 +161,10 @@ class QMCManager:
             avg = self.poll()
             if self.should_stop(avg):
                 break
-            if all(not w.running for w in self.workers):
+            if self.workers and all(not w.running for w in self.workers):
                 break                              # everything died/finished
+            # (an empty roster keeps polling: an elastic backend may still
+            # adopt workers — the stopping criteria bound the wait)
         return self.shutdown()
 
     def shutdown(self) -> RunningAverage:
@@ -195,9 +201,30 @@ class QMCManager:
             self.db.save_reservoir(self.run_key, w, e)
         return self.db.running_average(self.run_key)
 
+    # -- liveness journal ---------------------------------------------------
+    def record_event(self, kind: str, worker_id: int = -1,
+                     detail: str = '') -> None:
+        """Append one liveness event (join/dead/reconnect/steal/...).
+
+        Called by backends from ``tick`` — the journal is the audit trail
+        for elastic runs (who joined when, who was declared dead and why).
+        """
+        self.events.append((time.monotonic(), str(kind), int(worker_id),
+                            str(detail)))
+
     # -- fault injection (tests / chaos drills) -----------------------------
     def kill_forwarder(self, idx: int) -> None:
         self.tree[idx].kill()
 
     def worker_errors(self) -> list[str]:
-        return [w.error for w in self.workers if w.error]
+        """Worker tracebacks + spawn-retry attempt histories.
+
+        A worker that needed spawn retries (ProcessBackend backoff) shows
+        its per-attempt failures here even when it eventually came up —
+        silent retries would hide a sick node."""
+        errs = [w.error for w in self.workers if w.error]
+        for w in self.workers:
+            for i, a in enumerate(getattr(w, 'spawn_attempts', ()) or ()):
+                errs.append(f'worker {w.worker_id} spawn attempt '
+                            f'{i + 1} failed: {a}')
+        return errs

@@ -116,6 +116,65 @@ def test_process_backend_restart_walkers_reach_children():
     assert avg2.n_blocks > 6
 
 
+def test_process_spawn_retries_transient_failure():
+    """Transient spawn failures (EAGAIN under process pressure) are
+    retried with backoff; the worker still comes up and the attempt
+    history is surfaced through worker_errors()."""
+    import multiprocessing as mp
+    real = mp.get_context('spawn')
+
+    class FlakyCtx:
+        def __init__(self, failures):
+            self.failures = failures
+
+        def Queue(self):
+            return real.Queue()
+
+        def Process(self, *a, **kw):
+            if self.failures > 0:
+                self.failures -= 1
+                raise OSError('EAGAIN: Resource temporarily unavailable')
+            return real.Process(*a, **kw)
+
+    be = ProcessBackend(1, spawn_backoff=0.01)
+    be._ctx = FlakyCtx(2)
+    ctl = RunControl(max_blocks=4, poll_interval=0.05)
+    mgr = QMCManager(FakeSampler(), 'sr1', ctl, backend=be)
+    avg = mgr.run()
+    assert avg.n_blocks >= 4                     # third attempt succeeded
+    assert mgr.workers[0].spawn_attempts == [
+        'OSError: EAGAIN: Resource temporarily unavailable'] * 2
+    errs = mgr.worker_errors()
+    assert any('spawn attempt 1 failed' in e and 'EAGAIN' in e
+               for e in errs), errs
+    assert any('spawn attempt 2 failed' in e for e in errs), errs
+
+
+def test_process_spawn_exhaustion_yields_failed_handle():
+    """When every retry fails the handle is present-but-never-running:
+    the run proceeds on nothing (and stops), and worker_errors() reports
+    the full per-attempt history instead of hiding the sick node."""
+    from repro.runtime.backends import FailedSpawnHandle
+
+    class DeadCtx:
+        def Queue(self):
+            raise RuntimeError('no file descriptors left')
+
+    be = ProcessBackend(1, spawn_retries=2, spawn_backoff=0.01)
+    be._ctx = DeadCtx()
+    ctl = RunControl(max_blocks=4, poll_interval=0.02)
+    mgr = QMCManager(FakeSampler(), 'sr2', ctl, backend=be)
+    avg = mgr.run()                              # breaks: nothing running
+    assert avg.n_blocks == 0
+    h = mgr.workers[0]
+    assert isinstance(h, FailedSpawnHandle)
+    assert not h.running
+    assert len(h.spawn_attempts) == 3            # initial + 2 retries
+    errs = mgr.worker_errors()
+    assert any('spawn failed after 3 attempts' in e for e in errs), errs
+    assert sum('spawn attempt' in e for e in errs) == 3
+
+
 # ---------------------------------------------------------------------------
 # SimGridBackend: deterministic chaos drills
 # ---------------------------------------------------------------------------

@@ -1,0 +1,284 @@
+"""Multi-host TCP GridBackend: smoke, chaos parity, elasticity, stealing.
+
+Two worker flavors are exercised: real ``qmc_worker`` subprocesses (the CI
+smoke path — the full CLI + socket + process stack) and in-process
+``GridWorkerClient`` threads over real TCP (fast, lets a test hold a
+reference to the client).  Both speak the same wire protocol to the same
+backend.
+"""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.runtime import (GridBackend, GridConfig, GridWorkerClient,
+                           QMCManager, ResultDatabase, RunControl,
+                           make_backend)
+from repro.runtime.grid import DEAD, LIVE
+from repro.runtime.packets import HELLO, encode_json, frame
+from repro.runtime.testing import GaussianSampler
+
+MU = -3.0
+
+
+def grid_manager(n_workers, key, max_blocks, *, delay=0.005, db=None,
+                 poll=0.05, **netkw):
+    """Manager over local qmc_worker subprocesses (gauss sampler)."""
+    netkw.setdefault('worker_args', ('--sampler', f'gauss:delay={delay}'))
+    backend = GridBackend(n_workers, net=GridConfig(**netkw))
+    ctl = RunControl(max_blocks=max_blocks, poll_interval=poll)
+    return QMCManager(GaussianSampler(), key, ctl, db=db or ResultDatabase(),
+                      backend=backend)
+
+
+def start_client(address, *, delay=0.0, **kw):
+    """In-process worker client on a daemon thread (still real TCP)."""
+    c = GridWorkerClient(address, sampler=GaussianSampler(delay=delay), **kw)
+    t = threading.Thread(target=c.run, daemon=True)
+    t.start()
+    return c
+
+
+def wait_for(predicate, timeout=30.0, msg='condition'):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(0.02)
+    raise AssertionError(f'timed out waiting for {msg}')
+
+
+# ---------------------------------------------------------------------------
+# smoke + fault drills (subprocess workers: the CI path)
+# ---------------------------------------------------------------------------
+def test_grid_two_worker_smoke():
+    """Two localhost qmc_worker subprocesses complete a run unbiased."""
+    mgr = grid_manager(2, 'g-smoke', max_blocks=12)
+    avg = mgr.run()
+    assert not mgr.worker_errors(), mgr.worker_errors()
+    assert avg.n_blocks >= 12
+    assert abs(avg.energy - MU) < 0.1, avg
+    joins = [e for e in mgr.events if e[1] == 'join']
+    assert len(joins) == 2                      # both attached + journaled
+
+
+def test_grid_kill_one_worker_drill():
+    """SIGKILL a worker mid-run: heartbeat timeout declares it dead, its
+    lease is requeued (stolen), and the survivors finish unbiased."""
+    mgr = grid_manager(3, 'g-kill', max_blocks=40, delay=0.01,
+                       heartbeat_timeout=0.5)
+    mgr.start()
+    wait_for(lambda: all(h.state == LIVE for h in mgr.backend.handles),
+             msg='workers live')
+    victim = mgr.workers[1]
+    victim.crash()                              # SIGKILL + severed link
+    avg = mgr.run()
+    assert victim.state == DEAD
+    assert victim.dead_reason                   # detected, never assumed
+    assert mgr.backend.stolen_requeued >= 1     # lease went back on queue
+    dead_events = [e for e in mgr.events if e[1] == 'dead']
+    assert any(e[2] == victim.worker_id for e in dead_events)
+    assert avg.n_blocks >= 40
+    assert abs(avg.energy - MU) < 0.1, avg
+
+
+def test_grid_chaos_parity_with_simgrid():
+    """The acceptance drill (SimGridBackend parity): a SIGKILL'd worker +
+    a killed forwarder + 10% ingress packet drop still converge to the
+    same unbiased energy as an undisturbed run."""
+    clean = grid_manager(3, 'g-clean', max_blocks=40, delay=0.008)
+    avg_clean = clean.run()
+    assert not clean.worker_errors(), clean.worker_errors()
+
+    mgr = grid_manager(3, 'g-chaos', max_blocks=40, delay=0.008,
+                       heartbeat_timeout=0.5, drop_rate=0.1, drop_seed=7)
+    mgr.start()
+    wait_for(lambda: all(h.state == LIVE for h in mgr.backend.handles),
+             msg='workers live')
+
+    def chaos():
+        mgr.workers[0].crash()                  # hard node death
+        mgr.kill_forwarder(1)                   # tree node death
+    threading.Timer(0.4, chaos).start()
+    avg = mgr.run()
+
+    assert mgr.backend.packets_dropped() > 0    # the grid really was lossy
+    assert mgr.workers[0].state == DEAD
+    assert avg.n_blocks >= 40
+    assert abs(avg.energy - MU) < 0.1, avg
+    assert abs(avg.energy - avg_clean.energy) < 0.1, (avg, avg_clean)
+
+
+def test_grid_reconnect_replay_dedupes():
+    """Severing the TCP link mid-run forces an exponential-backoff
+    reconnect; the worker resumes its (job, id) identity and replays its
+    last block packet — the DB primary key dedupes, the run stays whole."""
+    mgr = grid_manager(2, 'g-reconn', max_blocks=30, delay=0.01)
+    mgr.start()
+    wait_for(lambda: all(h.state == LIVE for h in mgr.backend.handles),
+             msg='workers live')
+    h = mgr.workers[0]
+    threading.Timer(0.3, h.drop_connection).start()
+    avg = mgr.run()
+    assert h.reconnects >= 1                    # it really came back
+    reconn = [e for e in mgr.events if e[1] == 'reconnect']
+    assert any(e[2] == h.worker_id for e in reconn)
+    assert not mgr.worker_errors(), mgr.worker_errors()
+    assert avg.n_blocks >= 30
+    assert abs(avg.energy - MU) < 0.1, avg
+    # dedupe: every (job, worker, block) row is unique by construction;
+    # the replayed packet must not have inflated the weight
+    rows = mgr.db.blocks('g-reconn')
+    ids = [(b.job, b.worker_id, b.block_id) for b in rows]
+    assert len(ids) == len(set(ids))
+
+
+# ---------------------------------------------------------------------------
+# elasticity + load balancing (in-process clients over real TCP)
+# ---------------------------------------------------------------------------
+def test_grid_elastic_join_adopts_external_workers():
+    """Unclaimed HELLOs are parked and adopted on the next manager tick —
+    external hosts can join a running calculation."""
+    backend = GridBackend(0, net=GridConfig(local_workers=False))
+    ctl = RunControl(max_blocks=10, poll_interval=0.02)
+    mgr = QMCManager(GaussianSampler(), 'g-elastic', ctl,
+                     db=ResultDatabase(), backend=backend)
+    clients = [start_client(backend.address, delay=0.005) for _ in range(2)]
+    avg = mgr.run()                             # starts with zero workers
+    assert len(mgr.workers) == 2                # both adopted mid-run
+    assert {c.worker_id for c in clients} == {0, 1}
+    kinds = {e[1] for e in mgr.events}
+    assert 'hello' in kinds and 'join' in kinds
+    assert avg.n_blocks >= 10
+    assert abs(avg.energy - MU) < 0.1, avg
+
+
+def test_grid_spawn_without_local_workers_or_pending_raises():
+    backend = GridBackend(1, net=GridConfig(local_workers=False))
+    try:
+        with pytest.raises(RuntimeError, match='qmc_worker'):
+            backend.spawn(0, None, 'k', None, seed=0, subblocks_per_block=4)
+    finally:
+        backend.shutdown()
+
+
+def test_grid_rate_proportional_lease_resizing():
+    """Heterogeneous workers get re-sized sub-block leases: the fast
+    worker's lease grows past the slow worker's (same flush cadence,
+    bigger blocks — the paper's load-balancing shape)."""
+    backend = GridBackend(0, net=GridConfig(local_workers=False,
+                                            rebalance_interval=0.2))
+    ctl = RunControl(max_blocks=60, poll_interval=0.02)
+    mgr = QMCManager(GaussianSampler(), 'g-balance', ctl,
+                     db=ResultDatabase(), backend=backend)
+    fast = start_client(backend.address, delay=0.001)
+    slow = start_client(backend.address, delay=0.03)
+    avg = mgr.run()
+    by_id = {h.worker_id: h for h in backend.handles}
+    h_fast, h_slow = by_id[fast.worker_id], by_id[slow.worker_id]
+    assert h_fast.assigned_subblocks > h_slow.assigned_subblocks, \
+        (h_fast.assigned_subblocks, h_slow.assigned_subblocks,
+         h_fast.subblock_rate, h_slow.subblock_rate)
+    assert abs(avg.energy - MU) < 0.1, avg
+
+
+def test_grid_work_stealing_serves_dead_lease_to_survivor():
+    """A dead worker's outstanding lease is requeued and handed to the
+    fastest live worker as a one-shot bonus (the assignment queue is the
+    stealing mechanism)."""
+    backend = GridBackend(0, net=GridConfig(local_workers=False,
+                                            heartbeat_timeout=0.4,
+                                            rebalance_interval=0.1))
+    ctl = RunControl(max_blocks=200, wall_clock_limit=6.0,
+                     poll_interval=0.02)
+    mgr = QMCManager(GaussianSampler(), 'g-steal', ctl,
+                     db=ResultDatabase(), backend=backend)
+    survivor = start_client(backend.address, delay=0.004)
+    start_client(backend.address, delay=0.004)
+    wait_for(lambda: (mgr.poll(), len(backend.handles) == 2
+             and all(h.state == LIVE for h in backend.handles))[1],
+             msg='clients adopted', timeout=10.0)
+    victim = next(h for h in backend.handles
+                  if h.worker_id != survivor.worker_id)
+    backend._declare_dead(victim, 'test kill')  # lease requeues
+    avg = mgr.run()
+    assert backend.stolen_requeued >= 1
+    assert backend.stolen_served >= 1           # the survivor got the lease
+    assert abs(avg.energy - MU) < 0.15, avg
+
+
+def test_grid_heartbeat_timeout_detects_silent_worker():
+    """A connected-but-silent socket (no heartbeats) is declared dead
+    after heartbeat_timeout — liveness is detected, never assumed."""
+    backend = GridBackend(0, net=GridConfig(local_workers=False,
+                                            heartbeat_timeout=0.4))
+    ctl = RunControl(max_blocks=5, poll_interval=0.02)
+    mgr = QMCManager(GaussianSampler(), 'g-silent', ctl,
+                     db=ResultDatabase(), backend=backend)
+    try:
+        sock = socket.create_connection(backend.address, timeout=5.0)
+        sock.sendall(frame(HELLO, encode_json({})))   # join, then go silent
+        wait_for(lambda: (mgr.poll(), backend.handles)[1],
+                 msg='silent worker adopted', timeout=10.0)
+        h = backend.handles[0]
+        wait_for(lambda: (mgr.poll(), h.state == DEAD)[1],
+                 msg='heartbeat-timeout death', timeout=10.0)
+        assert h.dead_reason == 'heartbeat timeout'
+        assert any(e[1] == 'dead' and e[2] == h.worker_id
+                   for e in mgr.events)
+        sock.close()
+    finally:
+        backend.shutdown()
+        for f in mgr.tree:
+            f.stop()
+
+
+# ---------------------------------------------------------------------------
+# factory / spec integration
+# ---------------------------------------------------------------------------
+def test_make_backend_grid():
+    b = make_backend('grid', 2, net=GridConfig(heartbeat_timeout=9.0))
+    try:
+        assert isinstance(b, GridBackend)
+        assert b.net.heartbeat_timeout == 9.0
+        assert b.address[1] > 0                 # ephemeral port really bound
+    finally:
+        b.shutdown()
+
+
+def test_runspec_grid_validation():
+    from repro.launch.spec import RunSpec
+    spec = RunSpec(backend='grid', n_workers=2)
+    assert spec.backend == 'grid'
+    with pytest.raises(ValueError, match='grid'):
+        RunSpec(backend='grid', shards=2)
+
+
+def test_qmc_worker_cli_helpers():
+    from repro.launch.qmc_worker import make_sampler, parse_address
+    assert parse_address('10.0.0.1:7777') == ('10.0.0.1', 7777)
+    with pytest.raises(ValueError):
+        parse_address('no-port')
+    s = make_sampler('gauss:delay=0.5,true_energy=-2.0,n_walkers=4')
+    assert isinstance(s, GaussianSampler)
+    assert s.delay == 0.5 and s.mu == -2.0 and s.n_walkers == 4
+    assert make_sampler('spec') is None         # build from run payload
+    with pytest.raises(SystemExit):
+        make_sampler('bogus')
+
+
+@pytest.mark.slow
+def test_grid_real_sampler_from_run_payload():
+    """End-to-end --backend grid through RunSpec: workers rebuild the real
+    physics sampler on their host from the WELCOME payload (nothing jit'd
+    crosses the wire) and land on the variational energy."""
+    from repro.launch.spec import RunSpec, build_run
+    spec = RunSpec(system='h2', method='vmc', backend='grid',
+                   n_workers=2, n_walkers=12, steps=10, max_blocks=8,
+                   equil_steps=60)
+    run = build_run(spec)
+    avg = run.run()
+    assert not run.worker_errors(), run.worker_errors()
+    assert avg.n_blocks >= 8
+    assert abs(avg.energy - (-1.15)) < 0.15, avg

@@ -1,0 +1,127 @@
+"""Wire protocol: framing, CRC validation, resync, payload codecs."""
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.runtime import packets
+from repro.runtime.blocks import BlockResult
+from repro.runtime.packets import FrameReader, PacketError, frame, unframe
+
+
+def test_frame_roundtrip_all_kinds():
+    for kind in packets.KIND_NAMES:
+        payload = bytes([kind]) * (kind * 7)
+        assert unframe(frame(kind, payload)) == (kind, payload)
+
+
+def test_frame_roundtrip_empty_payload():
+    assert unframe(frame(packets.BYE)) == (packets.BYE, b'')
+
+
+def test_unframe_rejects_bad_magic():
+    f = bytearray(frame(packets.BLOCKS, b'data'))
+    f[0] ^= 0xFF
+    with pytest.raises(PacketError, match='magic'):
+        unframe(bytes(f))
+
+
+def test_unframe_rejects_flipped_payload_bit():
+    f = bytearray(frame(packets.BLOCKS, b'data'))
+    f[-1] ^= 0x01
+    with pytest.raises(PacketError, match='CRC'):
+        unframe(bytes(f))
+
+
+def test_unframe_rejects_truncation():
+    f = frame(packets.BLOCKS, b'0123456789')
+    with pytest.raises(PacketError):
+        unframe(f[:-3])                       # payload cut short
+    with pytest.raises(PacketError, match='short'):
+        unframe(f[:packets.HEADER_SIZE - 2])  # header cut short
+
+
+def test_reader_reassembles_byte_by_byte():
+    """TCP gives arbitrary chunk boundaries; one byte at a time is the
+    worst case and must still yield every frame exactly once."""
+    wire = frame(packets.HELLO, b'a') + frame(packets.BLOCKS, b'bb') \
+        + frame(packets.BYE)
+    r = FrameReader()
+    got = []
+    for i in range(len(wire)):
+        r.feed(wire[i:i + 1])
+        got.extend(r.frames())
+    assert got == [(packets.HELLO, b'a'), (packets.BLOCKS, b'bb'),
+                   (packets.BYE, b'')]
+    assert r.corrupt == 0
+
+
+def test_reader_skips_corrupt_frame_and_resyncs():
+    """A bit-flipped payload is dropped (counted) and the stream stays in
+    sync: the following good frame is still delivered."""
+    bad = bytearray(frame(packets.BLOCKS, b'corrupt-me'))
+    bad[-2] ^= 0x40
+    good = frame(packets.HEARTBEAT, b'alive')
+    r = FrameReader()
+    r.feed(bytes(bad) + good)
+    assert list(r.frames()) == [(packets.HEARTBEAT, b'alive')]
+    assert r.corrupt == 1
+
+
+def test_reader_bad_magic_is_fatal():
+    """Garbage where a header should be means the stream itself is lost
+    (framing can't resync without trusting the length field) — the caller
+    must drop the connection."""
+    r = FrameReader()
+    r.feed(b'\x00\x00garbage-stream-bytes')
+    with pytest.raises(PacketError, match='magic'):
+        list(r.frames())
+
+
+def test_reader_waits_for_partial_frame():
+    f = frame(packets.BLOCKS, b'x' * 100)
+    r = FrameReader()
+    r.feed(f[:50])
+    assert list(r.frames()) == []             # incomplete: nothing yet
+    r.feed(f[50:])
+    assert list(r.frames()) == [(packets.BLOCKS, b'x' * 100)]
+
+
+def test_encode_blocks_roundtrip():
+    blocks = [BlockResult('cafe0123', 3, 17, 256.0, -3.125, 9.8,
+                          aux={'accept': 0.5, 'growth': 1.25},
+                          timestamp=1234.5, job='abcdef'),
+              BlockResult('cafe0123', 4, 0, 64.0, -2.0, 4.0)]
+    out = packets.decode_blocks(packets.encode_blocks(blocks))
+    assert out == blocks
+
+
+def test_encode_blocks_is_not_pickle():
+    """No pickle on the receive path: the payload is struct+JSON under
+    zlib, so a malicious peer can't smuggle code into the data plane."""
+    enc = packets.encode_blocks(
+        [BlockResult('k', 0, 0, 1.0, -1.0, 1.0)])
+    raw = zlib.decompress(enc)
+    (n,) = struct.unpack_from('>I', raw, 0)
+    assert n == 1
+    assert b'pickle' not in raw and not raw.startswith(b'\x80')
+
+
+def test_decode_blocks_garbage_raises():
+    with pytest.raises(Exception):
+        packets.decode_blocks(b'not-zlib-data')
+
+
+def test_walkers_roundtrip():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(8, 2, 3))
+    e = rng.normal(size=8)
+    w2, e2 = packets.decode_walkers(packets.encode_walkers(w, e))
+    np.testing.assert_allclose(w, w2)
+    np.testing.assert_allclose(e, e2)
+
+
+def test_json_roundtrip():
+    obj = {'worker_id': 3, 'rate': 12.5, 'nested': {'a': [1, 2, 3]}}
+    assert packets.decode_json(packets.encode_json(obj)) == obj

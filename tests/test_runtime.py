@@ -326,6 +326,106 @@ def test_crash_mid_block_flushes_nothing():
     assert abs(avg.energy - (-3.0)) < 0.3
 
 
+def test_forwarder_reroutes_past_two_dead_ancestors():
+    """Regression: with BOTH the parent and the grandparent dead, a node
+    must walk its ancestor chain to the next live ancestor (here the
+    root) — one-hop fallback is not enough on deep trees."""
+    db = ResultDatabase()
+    tree = build_tree(9, db)        # node 7's chain: [3, 1, 0]
+    try:
+        assert [f.node_id for f in tree[7].ancestors] == [3, 1, 0]
+        tree[3].kill()
+        tree[1].kill()              # two consecutive dead ancestors
+        blocks = [BlockResult('rr', 7, i, 1.0, -2.0, 4.0)
+                  for i in range(8)]
+        assert tree[7].submit_blocks(blocks)
+        deadline = time.time() + 5.0
+        while db.n_blocks('rr') < 8 and time.time() < deadline:
+            time.sleep(0.02)
+        assert db.n_blocks('rr') == 8           # landed via the root
+        assert db.running_average('rr').energy == -2.0
+    finally:
+        for f in tree:
+            f.stop()
+
+
+def test_forwarder_rejects_corrupt_packet_without_dying():
+    """A corrupt inter-node packet (bad CRC, bad magic, wrong kind) is
+    rejected at ingress — counted, never enqueued — and the forwarder
+    thread keeps serving good packets."""
+    from repro.runtime import packets
+    db = ResultDatabase()
+    tree = build_tree(2, db)
+    root = tree[0]
+    try:
+        good = packets.frame(packets.BLOCKS, packets.encode_blocks(
+            [BlockResult('cp', 0, 0, 1.0, -2.5, 6.25)]))
+        flipped = bytearray(good)
+        flipped[-1] ^= 0x01                     # payload bit-flip: bad CRC
+        assert not root.submit_packet(b'not-a-frame-at-all')
+        assert not root.submit_packet(bytes(flipped))
+        assert not root.submit_packet(
+            packets.frame(packets.HEARTBEAT, b'x'))  # wrong kind
+        assert root.packets_corrupt == 3
+        assert root.alive and root._thread.is_alive()
+        assert root.submit_packet(good)         # still serving
+        deadline = time.time() + 5.0
+        while db.n_blocks('cp') < 1 and time.time() < deadline:
+            time.sleep(0.02)
+        assert db.n_blocks('cp') == 1
+        assert root.packets_corrupt == 3        # the good one wasn't counted
+    finally:
+        for f in tree:
+            f.stop()
+
+
+def test_database_survives_concurrent_append_and_merge():
+    """Durability under concurrency: parallel appenders plus a merge_from
+    running alongside never lose or duplicate a row (sqlite WAL + the
+    (run_key, job, worker, block) primary key)."""
+    import threading
+    main, other = ResultDatabase(), ResultDatabase()
+    other.append([BlockResult('cc', 99, i, 1.0, -1.0, 1.0, job='remote')
+                  for i in range(40)])
+
+    def writer(wid):
+        for i in range(50):
+            main.append([BlockResult('cc', wid, i, 1.0, -1.0, 1.0,
+                                     job='local')])
+
+    def merger():
+        for _ in range(5):
+            main.merge_from(other)              # overlapping re-merges
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(6)]
+    threads.append(threading.Thread(target=merger))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert main.n_blocks('cc') == 6 * 50 + 40   # no loss, no duplication
+    assert main.running_average('cc').energy == pytest.approx(-1.0)
+
+
+def test_database_dedupes_reconnect_replays():
+    """A reconnecting grid worker replays its last block packet; the
+    primary key (run_key, job, worker_id, block_id) makes the replay a
+    no-op while genuinely new identities still land."""
+    db = ResultDatabase()
+    blk = BlockResult('rk', 0, 0, 1.0, -1.0, 1.0, job='jobA')
+    assert db.append([blk]) == 1
+    assert db.append([blk]) == 0                # replay: deduped
+    # same counters under another job (a restarted cluster) DO land
+    assert db.append([BlockResult('rk', 0, 0, 1.0, -1.0, 1.0,
+                                  job='jobB')]) == 1
+    # merging a DB with overlapping rows adds only the novel ones
+    other = ResultDatabase()
+    other.append([blk, BlockResult('rk', 1, 0, 1.0, -1.0, 1.0, job='jobA')])
+    assert db.merge_from(other) == 1
+    assert db.merge_from(other) == 0            # idempotent
+    assert db.n_blocks('rk') == 3
+
+
 def test_runconfig_shim_removed():
     """The PR-4 one-release ``RunConfig`` deprecation shim is gone: run
     control is ``RunControl`` + an ``ExecutorBackend`` (or a declarative
