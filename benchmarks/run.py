@@ -17,7 +17,10 @@ process workers, steady-state blocks/s from stored block timestamps);
 Table X is the multideterminant ratio benchmark (shared-inverse SMW
 tables vs per-determinant slogdet at n_det = 1..1000); Table XI is the
 TCP grid-backend efficiency table (localhost qmc_worker subprocesses over
-sockets vs thread/process at equal worker counts).
+sockets vs thread/process at equal worker counts); Table XII is the
+wavefunction-optimization table (opt-vmc energy/variance trajectory at
+n_det = 1/100 plus the per-sub-block moment-accumulation overhead vs
+plain VMC).
 TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
@@ -40,7 +43,8 @@ from benchmarks import tables as T
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
-    ap.add_argument('--tables', default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI')
+    ap.add_argument('--tables',
+                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -50,7 +54,8 @@ def main(argv=None) -> int:
     fns = {'I': T.table1, 'II': T.table2, 'III': T.table3, 'IV': T.table4,
            'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
            'VIII': T.table_sem, 'IX': T.table_runtime,
-           'X': T.table_multidet, 'XI': T.table_grid}
+           'X': T.table_multidet, 'XI': T.table_grid,
+           'XII': T.table_opt}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

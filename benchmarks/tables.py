@@ -589,3 +589,72 @@ def table_driver(quick=True):
                     steps=steps, shards=shards, block_s=round(t, 4),
                     walker_steps_per_s=int(W * steps / t)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Table XII: wavefunction-optimization trajectory + moment-accumulation cost
+# ---------------------------------------------------------------------------
+def table_opt(quick=True):
+    """`opt-vmc` end price: descent trajectory and per-step overhead.
+
+    Two measurements on the synthetic-CI water system (DESIGN.md §10):
+
+    * the energy/variance trajectory of a seeded SR optimization over
+      ``opt_steps`` parameter updates at n_det = 1 and 100 (the full
+      runtime loop: thread workers, version-stamped blocks, broadcast) —
+      each row is one optimization step;
+    * ``mode=overhead`` rows: wall time of one jitted sub-block under the
+      ``opt-vmc`` propagator (VMC sampling + the four O-moment
+      accumulations, P = 3 + n_det parameters) vs the plain ``vmc``
+      propagator on identical settings — the pure price of gradient
+      accumulation, compile excluded.
+    """
+    from repro.core.driver import make_propagator
+    from repro.launch.spec import RunSpec, build_run
+    from repro.runtime.samplers import BlockSampler
+    from repro.systems import build_system
+
+    sizes = [1, 100]
+    opt_steps = 3 if quick else 6
+    rows = []
+    for n_det in sizes:
+        # tau sized for water's O core (the 0.3 method default freezes
+        # Metropolis at Z=8); heavy damping because at P = 103 the
+        # overlap matrix is estimated from a handful of small blocks
+        spec = RunSpec(system='water', method='opt-vmc', n_det=n_det,
+                       tau=0.02, backend='thread', n_workers=2,
+                       n_walkers=16, steps=30, subblocks_per_block=2,
+                       opt_steps=opt_steps, opt_blocks_per_step=4,
+                       opt_lr=0.05, sr_damping=0.5, seed=0)
+        run = build_run(spec)
+        res = run.run()
+        for s in res.steps:
+            rows.append(dict(
+                table='XII', system='water', n_det=n_det, mode='trajectory',
+                step=s.step, energy=round(s.energy, 5),
+                error=round(s.error, 5), variance=round(s.variance, 4),
+                blocks=s.n_blocks))
+    for n_det in sizes:
+        cfg, params = build_system('water', n_det=n_det, ci_seed=0)
+        times = {}
+        for method in ('vmc', 'opt-vmc'):
+            prop = make_propagator(method, cfg, tau=0.3, e_trial=None,
+                                   equil_steps=0)
+            samp = BlockSampler(prop, params, n_walkers=8, steps=5)
+            # the jitted block donates its state buffer: advance the
+            # held state every call instead of reusing a dead buffer
+            hold = {'state': samp.init_state(0, seed=0), 'step': 0}
+
+            def tick(s=samp, h=hold):
+                h['state'], acc, _, _ = s.run_subblock(h['state'],
+                                                       h['step'])
+                h['step'] += 1
+                return acc.weight
+            times[method] = _timeit(tick)
+        n_p = 3 + (n_det if n_det > 1 else 0)
+        rows.append(dict(
+            table='XII', system='water', n_det=n_det, mode='overhead',
+            n_params=n_p, vmc_s=round(times['vmc'], 5),
+            opt_s=round(times['opt-vmc'], 5),
+            overhead=round(times['opt-vmc'] / times['vmc'], 2)))
+    return rows

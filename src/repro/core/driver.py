@@ -57,6 +57,7 @@ def register_method(name: str, factory, default_tau: float) -> None:
 def _method_entry(method: str):
     if method not in _METHODS:
         from repro.core import dmc, sem, vmc  # noqa: F401  (registration)
+        from repro.optimize import propagator  # noqa: F401  (opt-vmc)
     if method not in _METHODS:
         raise ValueError(f'unknown method {method!r} '
                          f'(registered: {sorted(_METHODS)})')
@@ -123,6 +124,16 @@ class Population:
         if x.dtype == jnp.bool_:
             x = x.astype(jnp.float32)
         m = jnp.mean(x)
+        return jax.lax.pmean(m, self.axis_name) if self.axis_name else m
+
+    def mean0(self, x):
+        """Global mean over the walker axis only, trailing dims kept.
+
+        ``(W, ...) -> (...)`` — the vector/matrix moment reduction the
+        wavefunction optimizer needs for ⟨O⟩, ⟨O Oᵀ⟩ etc.; ``mean``
+        collapses every axis, this one pmeans only axis 0.
+        """
+        m = jnp.mean(x, axis=0)
         return jax.lax.pmean(m, self.axis_name) if self.axis_name else m
 
     def sum(self, x):

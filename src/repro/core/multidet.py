@@ -380,20 +380,24 @@ def spin_block_ci(C_blk: jnp.ndarray, holes, parts,
 
 
 def ci_assemble(mdw: MultiDetWavefunction, C_up: jnp.ndarray,
-                C_dn: jnp.ndarray | None, ns_steps: int = 1):
+                C_dn: jnp.ndarray | None, ns_steps: int = 1,
+                coeffs: jnp.ndarray | None = None):
     """Full multideterminant Slater summary for one walker (vmap-ready).
 
     C_up/C_dn: (n_orb, n_e_spin, 5) full MO tensors per spin block
     (C_dn None when n_dn = 0).  Returns (sign, logdet, grad, lap) of
     Psi_det = sum_I c_I D_I^up D_I^dn, where ``logdet`` absorbs log|S| and
     ``sign`` the sign of S, so downstream Jastrow/energy assembly is
-    identical to the single-determinant path.
+    identical to the single-determinant path.  ``coeffs`` optionally
+    overrides ``mdw.coeffs`` with a *traced* coefficient vector (the
+    wavefunction optimizer updates CI coefficients between blocks).
     """
+    c = mdw.coeffs if coeffs is None else coeffs
     up = spin_block_ci(C_up, mdw.holes_up, mdw.parts_up, ns_steps)
     dn = (spin_block_ci(C_dn, mdw.holes_dn, mdw.parts_dn, ns_steps)
           if C_dn is not None else None)
     r_dn = dn.ratios if dn is not None else jnp.ones_like(up.ratios)
-    w, S = ci_weights(mdw.coeffs, up.ratios, r_dn)
+    w, S = ci_weights(c, up.ratios, r_dn)
 
     cu = ci_corrections(mdw.holes_up, mdw.parts_up, C_up, up.minv,
                         up.table, w)

@@ -62,12 +62,22 @@ class WavefunctionConfig:
 
 
 class WavefunctionParams(NamedTuple):
-    """Dynamic parameters (constant during a run — the paper's 'A' etc.)."""
+    """Dynamic parameters (constant during a *block* — the paper's 'A').
+
+    ``ci_coeffs`` is an optional traced override of the static CI
+    coefficients baked into ``cfg.ci``: ``None`` (the default, an empty
+    pytree leaf) means "use ``cfg.ci.coeffs``" and reproduces the fixed
+    trial wavefunction exactly; the wavefunction-optimization subsystem
+    (``repro.optimize``) sets it so CI coefficients become differentiable
+    and updatable between blocks without retracing (they ride the same
+    traced-params argument as the Jastrow parameters).
+    """
 
     coords: jnp.ndarray     # (n_at, 3)
     charges: jnp.ndarray    # (n_at,)
     mo: jnp.ndarray         # (n_rows, n_ao) MO coefficients ('A' matrix)
     jastrow: JastrowParams
+    ci_coeffs: jnp.ndarray | None = None   # (n_det,) traced CI override
 
 
 class PsiState(NamedTuple):
@@ -205,7 +215,7 @@ def _finish_state(cfg: WavefunctionConfig, params: WavefunctionParams,
         from . import multidet
         up_all, dn_all = _ci_blocks(cfg, C)
         sign, logdet, sgrad, slap = multidet.ci_assemble(
-            cfg.ci, up_all, dn_all, cfg.ns_steps)
+            cfg.ci, up_all, dn_all, cfg.ns_steps, coeffs=params.ci_coeffs)
     else:
         up, dn = _slater_blocks(cfg, C)
         su, lu, gu, qu, _ = slater._spin_block(up, cfg.ns_steps)
@@ -257,7 +267,9 @@ def log_psi(cfg: WavefunctionConfig, params: WavefunctionParams,
         else:
             r_dn = jnp.ones_like(up.ratios)
             sd, ld = jnp.ones_like(up.sign), jnp.zeros_like(up.logdet)
-        S = multidet.ci_sum(cfg.ci.coeffs, up.ratios, r_dn)
+        coeffs = (cfg.ci.coeffs if params.ci_coeffs is None
+                  else params.ci_coeffs)
+        S = multidet.ci_sum(coeffs, up.ratios, r_dn)
         sign_S, log_S = multidet.ci_log_sum(S)
         return up.sign * sd * sign_S, up.logdet + ld + log_S + jv
     up, dn = _slater_blocks(cfg, C)

@@ -17,7 +17,9 @@ substrate (paper §V: "all kinds of computational platforms"):
   or remote ``python -m repro.launch.qmc_worker --connect HOST:PORT``)
   attach with heartbeats, reconnect backoff, and work stealing.
 
-``--method vmc|dmc|sem-vmc`` selects the propagator plug-in; ``--shards N``
+``--method vmc|dmc|sem-vmc|opt-vmc`` selects the propagator plug-in
+(``opt-vmc`` runs the outer wavefunction-optimization loop of DESIGN.md
+§10 instead of a single sampling run); ``--shards N``
 shards each worker's walker axis over N local devices (DESIGN.md §5).  The
 database IS the checkpoint: re-running with the same --db resumes from the
 stored walker reservoir and keeps appending blocks under the same CRC-32
@@ -39,7 +41,8 @@ def parse_spec(argv=None) -> RunSpec:
     ap = argparse.ArgumentParser()
     ap.add_argument('--system', default='h2',
                     help='h|h2|heh+|water|smallest|b-strand|...')
-    ap.add_argument('--method', choices=('vmc', 'dmc', 'sem-vmc'),
+    ap.add_argument('--method',
+                    choices=('vmc', 'dmc', 'sem-vmc', 'opt-vmc'),
                     default='vmc')
     ap.add_argument('--n-det', type=int, default=1,
                     help='CI expansion size (1: single determinant; >1: '
@@ -65,6 +68,22 @@ def parse_spec(argv=None) -> RunSpec:
     ap.add_argument('--db', default=':memory:')
     ap.add_argument('--e-trial', type=float, default=None)
     ap.add_argument('--seed', type=int, default=0)
+    ap.add_argument('--opt-steps', type=int, default=5,
+                    help='[opt-vmc] outer parameter-update iterations')
+    ap.add_argument('--opt-solver', choices=('sr', 'lm'), default='sr',
+                    help='[opt-vmc] stochastic reconfiguration or linear '
+                         'method update')
+    ap.add_argument('--opt-lr', type=float, default=0.1,
+                    help='[opt-vmc] SR step scale')
+    ap.add_argument('--sr-damping', type=float, default=1e-2,
+                    help='[opt-vmc] diagonal regularization of the overlap '
+                         'matrix')
+    ap.add_argument('--opt-blocks', type=int, default=4,
+                    help='[opt-vmc] blocks sampled per parameter version')
+    ap.add_argument('--ckpt-dir', default='',
+                    help='[opt-vmc] per-step checkpoint directory '
+                         '(empty: no checkpoints; an existing directory '
+                         'resumes from its latest step)')
     ap.add_argument('--sim-latency', type=float, default=0.0,
                     help='[sim backend] seconds per worker->tree send')
     ap.add_argument('--sim-drop', type=float, default=0.0,
@@ -93,6 +112,9 @@ def parse_spec(argv=None) -> RunSpec:
         net=GridConfig(host=host, port=port,
                        heartbeat_timeout=args.heartbeat_timeout,
                        local_workers=not args.no_local_workers),
+        opt_steps=args.opt_steps, opt_solver=args.opt_solver,
+        opt_lr=args.opt_lr, sr_damping=args.sr_damping,
+        opt_blocks_per_step=args.opt_blocks, ckpt_dir=args.ckpt_dir,
         max_blocks=args.blocks, target_error=args.target_error,
         wall_clock_limit=args.wall_clock, db=args.db, seed=args.seed)
 

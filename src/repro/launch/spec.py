@@ -34,7 +34,8 @@ from repro.systems import build_system
 # mirrors the built-in core.driver registrations; kept as a literal so
 # spec construction/validation stays jax-import-free (the registry itself
 # is consulted lazily for tau defaults and propagator construction)
-METHODS = ('vmc', 'dmc', 'sem-vmc')
+METHODS = ('vmc', 'dmc', 'sem-vmc', 'opt-vmc')
+OPT_SOLVERS = ('sr', 'lm')
 BACKEND_NAMES = ('thread', 'process', 'sim', 'grid')
 
 
@@ -72,6 +73,14 @@ class RunSpec:
     grid: SimGridConfig = dataclasses.field(default_factory=SimGridConfig)
     net: GridConfig = dataclasses.field(default_factory=GridConfig)
 
+    # wavefunction optimization (method='opt-vmc'; DESIGN.md §10)
+    opt_steps: int = 5               # outer parameter-update iterations
+    opt_solver: str = 'sr'           # sr (stochastic reconfig) | lm (linear)
+    opt_lr: float = 0.1              # SR step scale
+    sr_damping: float = 1e-2         # diagonal shift on the overlap matrix
+    opt_blocks_per_step: int = 4     # blocks sampled per parameter version
+    ckpt_dir: str = ''               # per-step checkpoints ('' = off)
+
     # stopping criteria
     max_blocks: int = 20
     target_error: float = 0.0        # Ha, stderr target (0: off)
@@ -97,6 +106,11 @@ class RunSpec:
                 'grid hosts')
         if self.n_det < 1:
             raise ValueError(f'n_det must be >= 1, got {self.n_det}')
+        if self.opt_solver not in OPT_SOLVERS:
+            raise ValueError(f'unknown opt_solver {self.opt_solver!r} '
+                             f'(choose from {OPT_SOLVERS})')
+        if self.opt_steps < 1:
+            raise ValueError(f'opt_steps must be >= 1, got {self.opt_steps}')
 
     def replace(self, **kw) -> 'RunSpec':
         """Functional update (dataclasses.replace convenience)."""
@@ -129,7 +143,15 @@ class QMCRun:
         return self.manager.backend
 
     def run(self):
-        """Blocking run to completion -> final RunningAverage."""
+        """Blocking run to completion.
+
+        ``method='opt-vmc'`` runs the outer optimization loop and returns
+        an ``OptResult``; every other method returns the final
+        ``RunningAverage``.
+        """
+        if self.spec.method == 'opt-vmc':
+            from repro.optimize.loop import run_optimization
+            return run_optimization(self)
         return self.manager.run()
 
     def worker_errors(self) -> list[str]:

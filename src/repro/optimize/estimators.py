@@ -1,0 +1,121 @@
+"""Parameter vector <-> wavefunction mapping and the O_i derivative estimator.
+
+The optimization works on one flat vector
+
+    p = [b_ee, b_en, a_en, c_0 .. c_{n_det-1}]      (CI tail only with cfg.ci)
+
+so the solvers (``optimize.solvers``) are plain dense linear algebra.  The
+derivative estimator O_i(R) = ∂ ln|Ψ(R)| / ∂ p_i is autodiff of the
+existing ``core.wavefunction.log_psi``: ``params_from_vector`` rebuilds a
+``WavefunctionParams`` whose Jastrow scalars and (traced) CI coefficients
+come from the vector, and ``jax.grad`` differentiates through the Jastrow
+value and the CI determinant sum.  The MO tensor does not depend on the
+vector (MO coefficients are not optimized), so reverse mode prunes the
+whole AO/MO/Slater branch from the backward pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.jastrow import JastrowParams
+from repro.core.wavefunction import log_psi, psi_state_batched
+
+N_JASTROW = 3           # b_ee, b_en, a_en
+B_MIN = 1e-2            # Padé denominators stay strictly positive
+
+
+def n_params(cfg) -> int:
+    """Length of the flat optimization vector for this wavefunction."""
+    return N_JASTROW + (int(cfg.ci.n_det) if cfg.ci is not None else 0)
+
+
+def opt_vector(cfg, params) -> np.ndarray:
+    """Current flat parameter vector (host-side f64)."""
+    j = params.jastrow
+    head = [float(j.b_ee), float(j.b_en), float(j.a_en)]
+    if cfg.ci is not None:
+        ci = (params.ci_coeffs if params.ci_coeffs is not None
+              else cfg.ci.coeffs)
+        head.extend(np.asarray(ci, np.float64).reshape(-1).tolist())
+    return np.asarray(head, np.float64)
+
+
+def traced_vector(cfg, params):
+    """Flat parameter vector as a traced jnp array (inside jit)."""
+    j = params.jastrow
+    head = jnp.stack([jnp.asarray(j.b_ee, jnp.float32),
+                      jnp.asarray(j.b_en, jnp.float32),
+                      jnp.asarray(j.a_en, jnp.float32)])
+    if cfg.ci is None:
+        return head
+    ci = (params.ci_coeffs if params.ci_coeffs is not None
+          else jnp.asarray(cfg.ci.coeffs))
+    return jnp.concatenate([head, jnp.asarray(ci, jnp.float32).reshape(-1)])
+
+
+def params_from_vector(cfg, params, vec):
+    """Rebuild ``WavefunctionParams`` from the flat vector (traceable)."""
+    vec = jnp.asarray(vec, jnp.float32)
+    jas = JastrowParams(b_ee=vec[0], b_en=vec[1], a_en=vec[2])
+    ci = vec[N_JASTROW:] if cfg.ci is not None else None
+    return params._replace(jastrow=jas, ci_coeffs=ci)
+
+
+def apply_vector(cfg, params, vec):
+    """Host-side install of an updated vector -> new WavefunctionParams."""
+    return params_from_vector(cfg, params, np.asarray(vec, np.float64))
+
+
+def clip_vector(cfg, vec) -> np.ndarray:
+    """Project an updated vector back into the valid parameter domain.
+
+    The Padé denominators b_ee/b_en must stay positive (a non-positive b
+    puts a pole of U(r) at physical r); the CI tail is renormalized to
+    unit norm — |Ψ| is invariant up to a constant under CI scaling, so
+    this only pins the gauge the solvers drift along.
+    """
+    out = np.array(vec, np.float64, copy=True)
+    out[0] = max(out[0], B_MIN)
+    out[1] = max(out[1], B_MIN)
+    if cfg.ci is not None and out.shape[0] > N_JASTROW:
+        tail = out[N_JASTROW:]
+        norm = float(np.linalg.norm(tail))
+        if norm > 0.0:
+            out[N_JASTROW:] = tail / norm
+    return out
+
+
+def make_o_fn(cfg):
+    """Build O(vec, params, r) -> (P,): per-walker ∂ ln|Ψ| / ∂ p.
+
+    ``params`` supplies the non-optimized pieces (geometry, MOs); the
+    returned function is pure-jax and vmaps over walkers.
+    """
+    def _lp(vec, params, r_elec):
+        return log_psi(cfg, params_from_vector(cfg, params, vec), r_elec)[1]
+
+    return jax.grad(_lp, argnums=0)
+
+
+def reweighted_energy(cfg, params, vec, R) -> float:
+    """Correlated-sampling variational energy of the vector ``vec``.
+
+    R: (W, n_e, 3) fixed samples drawn from |Ψ(params)|²; the energy of
+    the trial state at ``vec`` is the importance-sampled estimate
+
+        E(vec) = Σ w E_L' / Σ w,   w = |Ψ'(R)/Ψ(R)|²
+
+    over the *same* configurations — the noise common to E(vec) and
+    E(vec') cancels, so a parameter step can be tested deterministically
+    (given the sample) for an energy decrease.
+    """
+    R = jnp.asarray(R)
+    p1 = params_from_vector(cfg, params, vec)
+    lp0 = psi_state_batched(cfg, params, R).log_psi
+    st1 = psi_state_batched(cfg, p1, R)
+    logw = 2.0 * (st1.log_psi - lp0)
+    logw = logw - jnp.max(logw)
+    w = jnp.exp(logw)
+    return float(jnp.sum(w * st1.e_loc) / jnp.sum(w))

@@ -58,7 +58,10 @@ class WorkerHandle(Protocol):
 
     ``stop`` flushes the in-flight partial block then exits (SIGTERM
     analogue); ``crash`` is a hard death with no flush (node failure);
-    ``send_e_trial`` delivers between-block scalar feedback.
+    ``send_e_trial`` delivers between-block scalar feedback;
+    ``send_params`` delivers a versioned wavefunction-parameter vector
+    (the opt-vmc broadcast — applied between blocks, stamped into every
+    subsequent block's aux).
     """
 
     worker_id: int
@@ -75,6 +78,8 @@ class WorkerHandle(Protocol):
     def join(self, timeout: float = 10.0) -> None: ...
 
     def send_e_trial(self, e_trial: float) -> None: ...
+
+    def send_params(self, version: int, vec) -> None: ...
 
 
 @runtime_checkable
@@ -149,23 +154,27 @@ def _process_worker_main(worker_id: int, sampler: Sampler, run_key: str,
     instead of direct forwarder calls.  Runs top-level so the ``spawn``
     start method can import it by reference.
     """
-    def drain_ctrl(e_trial):
-        """Empty the control mailbox: -> (stop_seen, latest_e_trial).
+    def drain_ctrl(e_trial, params_upd):
+        """Empty the control mailbox: -> (stop_seen, e_trial, params_upd).
 
         Always drains *everything* pending — E_T feedback arrives every
         manager poll, so a one-message-per-check scheme would let the
         backlog grow and bury a later 'stop' behind stale feedback.
+        Parameter broadcasts keep only the newest (version, vec) pair and
+        are applied between blocks only.
         """
         stop_seen = False
         while True:
             try:
                 msg = ctrl_q.get_nowait()
             except queue.Empty:
-                return stop_seen, e_trial
+                return stop_seen, e_trial, params_upd
             if msg[0] == 'stop':
                 stop_seen = True
             elif msg[0] == 'e_trial':
                 e_trial = msg[1]
+            elif msg[0] == 'params':
+                params_upd = (msg[1], msg[2])
 
     try:
         state = sampler.init_state(worker_id, seed, init_walkers)
@@ -174,13 +183,19 @@ def _process_worker_main(worker_id: int, sampler: Sampler, run_key: str,
         blocks_done = 0
         stop = False
         e_trial = None
+        params_upd = None
         while not stop:
-            stop, e_trial = drain_ctrl(e_trial)
+            stop, e_trial, params_upd = drain_ctrl(e_trial, params_upd)
             if stop:
                 break
             if e_trial is not None:
                 state = sampler.set_e_trial(state, e_trial)
                 e_trial = None
+            if params_upd is not None:
+                apply = getattr(sampler, 'apply_params', None)
+                if apply is not None:
+                    apply(*params_upd)
+                params_upd = None
             acc = BlockAccumulator()
             walkers = energies = None
             for _ in range(subblocks_per_block):
@@ -188,7 +203,7 @@ def _process_worker_main(worker_id: int, sampler: Sampler, run_key: str,
                     sampler.run_subblock(state, step)
                 step += 1
                 acc = acc.merge(sub)
-                stop, e_trial = drain_ctrl(e_trial)
+                stop, e_trial, params_upd = drain_ctrl(e_trial, params_upd)
                 if stop:
                     break                  # truncated block: flush below
             if acc.is_valid():
@@ -243,6 +258,13 @@ class ProcessWorkerHandle:
     def send_e_trial(self, e_trial: float) -> None:
         try:
             self.ctrl_q.put(('e_trial', float(e_trial)))
+        except ValueError:
+            pass
+
+    def send_params(self, version: int, vec) -> None:
+        try:
+            self.ctrl_q.put(('params', int(version),
+                             np.asarray(vec, np.float64)))
         except ValueError:
             pass
 
@@ -309,6 +331,9 @@ class FailedSpawnHandle:
         pass
 
     def send_e_trial(self, e_trial: float) -> None:
+        pass
+
+    def send_params(self, version: int, vec) -> None:
         pass
 
 

@@ -14,6 +14,8 @@ import math
 import time
 from typing import Mapping
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockAccumulator:
@@ -36,10 +38,23 @@ class BlockAccumulator:
     @classmethod
     def from_stats(cls, stats) -> 'BlockAccumulator':
         """From anything with weight/e_mean/e2_mean/aux attributes
-        (e.g. the jit'd driver's BlockStats) — converted to host floats."""
+        (e.g. the jit'd driver's BlockStats) — converted to host floats.
+
+        Array-valued aux entries (the optimizer's moment estimators) are
+        flattened to indexed scalar keys — ``opt_o/3``, ``opt_oo/1/2`` —
+        so the weighted-mean merge rule, the JSON wire encoding, and the
+        database column all keep their scalar-float contract unchanged.
+        """
+        aux = {}
+        for k, v in dict(stats.aux).items():
+            arr = np.asarray(v)
+            if arr.ndim == 0:
+                aux[k] = float(arr)
+            else:
+                for idx, val in np.ndenumerate(arr):
+                    aux['/'.join([k, *map(str, idx)])] = float(val)
         return cls(weight=float(stats.weight), e_mean=float(stats.e_mean),
-                   e2_mean=float(stats.e2_mean),
-                   aux={k: float(v) for k, v in dict(stats.aux).items()})
+                   e2_mean=float(stats.e2_mean), aux=aux)
 
     def merge(self, other: 'BlockAccumulator') -> 'BlockAccumulator':
         """Weighted combination; aux keys missing on one side count as 0

@@ -58,10 +58,11 @@ import numpy as np
 
 from repro.runtime.blocks import BlockAccumulator
 from repro.runtime.packets import (ASSIGN, BLOCKS, BYE, E_TRIAL, ERROR,
-                                   HEARTBEAT, HELLO, STOP, WALKERS, WELCOME,
-                                   FrameReader, PacketError, decode_blocks,
-                                   decode_json, decode_walkers, encode_blocks,
-                                   encode_json, encode_walkers, frame)
+                                   HEARTBEAT, HELLO, PARAMS, STOP, WALKERS,
+                                   WELCOME, FrameReader, PacketError,
+                                   decode_blocks, decode_json, decode_params,
+                                   decode_walkers, encode_blocks, encode_json,
+                                   encode_params, encode_walkers, frame)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -181,6 +182,9 @@ class GridWorkerHandle:
     def send_e_trial(self, e_trial: float) -> None:
         self._send(E_TRIAL, struct.pack('>d', float(e_trial)))
 
+    def send_params(self, version: int, vec) -> None:
+        self._send(PARAMS, encode_params(version, np.asarray(vec)))
+
     # -- internals --------------------------------------------------------
     def _send(self, kind: int, payload: bytes = b'') -> None:
         conn = self.conn
@@ -233,6 +237,7 @@ class GridBackend:
         self._events: collections.deque = collections.deque()
         self._lock = threading.RLock()
         self._run_payload: dict | None = None
+        self._current_params: tuple[int, list] | None = None
         self._drop_rngs: dict[int, np.random.Generator] = {}
         self._dropped = 0
         self._next_rebalance = 0.0
@@ -253,6 +258,16 @@ class GridBackend:
         build the sampler locally (declarative — nothing jit'd crosses
         the wire)."""
         self._run_payload = dict(payload)
+
+    def set_current_params(self, version: int, vec) -> None:
+        """Record the current wavefunction-parameter broadcast (opt-vmc).
+
+        Shipped in every subsequent WELCOME, so a worker that reconnects
+        *or* joins elastically mid-optimization starts sampling at the
+        current parameter version instead of the spec's initial one."""
+        with self._lock:
+            self._current_params = (int(version),
+                                    np.asarray(vec, np.float64).tolist())
 
     # -- ExecutorBackend protocol ----------------------------------------
     def spawn(self, worker_id: int, sampler, run_key: str, forwarder, *,
@@ -472,6 +487,10 @@ class GridBackend:
                        subblocks=h.assigned_subblocks,
                        heartbeat_interval=self.net.heartbeat_interval,
                        spec=self._run_payload)
+        with self._lock:
+            params = self._current_params
+        if params is not None:
+            welcome['params_version'], welcome['params_vec'] = params
         if h.init_walkers is not None:
             welcome['init_walkers'] = np.asarray(h.init_walkers).tolist()
         try:
@@ -601,6 +620,7 @@ class GridWorkerClient:
         self._bonus = 0
         self._stop = False
         self._e_trial: float | None = None
+        self._params_update: tuple | None = None
         self._last_packet: bytes | None = None
 
     # -- main entry --------------------------------------------------------
@@ -721,6 +741,13 @@ class GridWorkerClient:
                 self._state = self.sampler.init_state(
                     self.worker_id, int(welcome['seed']), init_walkers)
                 self._t0 = time.monotonic()
+            if welcome.get('params_version') is not None:
+                # the WELCOME carries the manager's current parameter
+                # broadcast: a reconnecting worker (which kept its sampler)
+                # and an elastic late joiner both align on the current
+                # version before sampling a single block
+                self._params_update = (int(welcome['params_version']),
+                                       welcome['params_vec'])
             if self._last_packet is not None:
                 # replay the last block packet after a reconnect — it may
                 # have been lost mid-link-failure; the DB dedupes a replay
@@ -736,6 +763,12 @@ class GridWorkerClient:
                         self._state = self.sampler.set_e_trial(
                             self._state, self._e_trial)
                         self._e_trial = None
+                    if self._params_update is not None:
+                        version, vec = self._params_update
+                        self._params_update = None
+                        apply = getattr(self.sampler, 'apply_params', None)
+                        if apply is not None:
+                            apply(int(version), np.asarray(vec))
                     n_sub = max(1, self.subblocks + self._bonus)
                     self._bonus = 0
                     for _ in range(n_sub):
@@ -795,6 +828,8 @@ class GridWorkerClient:
                     self._stop = True
                 elif kind == E_TRIAL:
                     (self._e_trial,) = struct.unpack('>d', payload)
+                elif kind == PARAMS:
+                    self._params_update = decode_params(payload)
                 elif kind == ASSIGN:
                     lease = decode_json(payload)
                     self.subblocks = int(lease['subblocks'])

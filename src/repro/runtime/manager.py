@@ -142,6 +142,23 @@ class QMCManager:
             return True
         return False
 
+    def broadcast_params(self, version: int, vec) -> None:
+        """Broadcast a versioned wavefunction-parameter vector (opt-vmc).
+
+        Delivered to every running worker through its handle's
+        ``send_params`` (thread mailbox / process control queue / grid
+        PARAMS packet) and recorded on the backend (when it supports
+        ``set_current_params``) so late joiners and reconnects receive
+        the current version in their WELCOME.
+        """
+        vec = np.asarray(vec, np.float64)
+        set_current = getattr(self.backend, 'set_current_params', None)
+        if set_current is not None:
+            set_current(version, vec)
+        for w in self.workers:
+            if w.running:
+                w.send_params(version, vec)
+
     def poll(self) -> RunningAverage:
         self.backend.tick(self)
         avg = self.db.running_average(self.run_key)

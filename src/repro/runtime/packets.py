@@ -15,7 +15,8 @@ must never take down the receiving forwarder/manager thread.
 Block payloads are a compact struct-packed binary encoding (replacing the
 seed's zlib-pickle): per block a length-prefixed ``run_key``/``job``, the
 integer identity ``(worker_id, block_id)``, the four float sufficient
-statistics, and the aux dict as JSON — then zlib-compressed (the paper
+statistics, and the aux dict as u32-length-prefixed JSON (opt-vmc blocks
+carry O(P²) flattened moment entries) — then zlib-compressed (the paper
 compresses all transfers).  No pickle is ever evaluated on the receive
 path, so a malicious or corrupt peer cannot execute code via the data
 plane.
@@ -32,7 +33,8 @@ import numpy as np
 from repro.runtime.blocks import BlockResult
 
 MAGIC = b'\xa5Q'              # 'Q'MC + a non-ASCII guard byte
-VERSION = 1
+VERSION = 2                   # v2: u32 aux-JSON length in BLOCKS (the
+#                               opt-vmc moment matrices overflow u16)
 _HEADER = struct.Struct('>2sBBII')   # magic, version, kind, length, crc32
 HEADER_SIZE = _HEADER.size
 
@@ -47,11 +49,12 @@ STOP = 7         # manager -> worker: flush the partial block, then exit
 ASSIGN = 8       # manager -> worker: sub-block lease re-sizing (JSON)
 ERROR = 9        # worker -> manager: traceback (utf-8)
 BYE = 10         # worker -> manager: graceful exit acknowledgement
+PARAMS = 11      # manager -> worker: versioned wavefunction params (npz)
 
 KIND_NAMES = {HELLO: 'hello', WELCOME: 'welcome', BLOCKS: 'blocks',
               WALKERS: 'walkers', HEARTBEAT: 'heartbeat',
               E_TRIAL: 'e_trial', STOP: 'stop', ASSIGN: 'assign',
-              ERROR: 'error', BYE: 'bye'}
+              ERROR: 'error', BYE: 'bye', PARAMS: 'params'}
 
 
 class PacketError(ValueError):
@@ -138,6 +141,19 @@ def _unpack_str(buf: memoryview, off: int) -> tuple[str, int]:
     return bytes(buf[off:off + n]).decode('utf-8'), off + n
 
 
+def _pack_str32(s: str) -> bytes:
+    # aux JSON needs a u32 length: an opt-vmc block carries O(P^2)
+    # flattened moment entries (P ~ 100 -> hundreds of kB of JSON)
+    b = s.encode('utf-8')
+    return struct.pack('>I', len(b)) + b
+
+
+def _unpack_str32(buf: memoryview, off: int) -> tuple[str, int]:
+    (n,) = struct.unpack_from('>I', buf, off)
+    off += 4
+    return bytes(buf[off:off + n]).decode('utf-8'), off + n
+
+
 def encode_blocks(blocks: list[BlockResult]) -> bytes:
     """Compact binary encoding of a block list (zlib-compressed)."""
     out = [struct.pack('>I', len(blocks))]
@@ -146,7 +162,7 @@ def encode_blocks(blocks: list[BlockResult]) -> bytes:
         out.append(_pack_str(b.job))
         out.append(_BLOCK_FIXED.pack(b.worker_id, b.block_id, b.weight,
                                      b.e_mean, b.e2_mean, b.timestamp))
-        out.append(_pack_str(json.dumps(dict(b.aux))))
+        out.append(_pack_str32(json.dumps(dict(b.aux))))
     return zlib.compress(b''.join(out))
 
 
@@ -161,7 +177,7 @@ def decode_blocks(payload: bytes) -> list[BlockResult]:
         job, off = _unpack_str(buf, off)
         wid, bid, w, e, e2, ts = _BLOCK_FIXED.unpack_from(buf, off)
         off += _BLOCK_FIXED.size
-        aux_json, off = _unpack_str(buf, off)
+        aux_json, off = _unpack_str32(buf, off)
         blocks.append(BlockResult(run_key=run_key, worker_id=wid,
                                   block_id=bid, weight=w, e_mean=e,
                                   e2_mean=e2, aux=json.loads(aux_json),
@@ -181,6 +197,20 @@ def decode_walkers(payload: bytes) -> tuple[np.ndarray, np.ndarray]:
     """Inverse of ``encode_walkers``."""
     data = np.load(io.BytesIO(payload), allow_pickle=False)
     return data['walkers'], data['energies']
+
+
+def encode_params(version: int, vec: np.ndarray) -> bytes:
+    """Versioned wavefunction-parameter broadcast as npz (no pickle)."""
+    buf = io.BytesIO()
+    np.savez_compressed(buf, version=np.asarray(int(version), np.int64),
+                        vec=np.asarray(vec, np.float64))
+    return buf.getvalue()
+
+
+def decode_params(payload: bytes) -> tuple[int, np.ndarray]:
+    """Inverse of ``encode_params``."""
+    data = np.load(io.BytesIO(payload), allow_pickle=False)
+    return int(data['version']), data['vec']
 
 
 def encode_json(obj) -> bytes:

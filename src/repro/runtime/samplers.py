@@ -20,6 +20,8 @@ worker process.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -36,6 +38,7 @@ class BlockSampler:
         self.propagator = propagator
         self.params = params
         self.n_walkers = int(n_walkers)
+        self.params_version = 0
         self.driver = EnsembleDriver(propagator, steps, mesh=mesh)
 
     def init_state(self, worker_id: int, seed: int, walkers=None):
@@ -51,11 +54,34 @@ class BlockSampler:
         wkey, st = state
         return (wkey, self.driver.feedback(st, e_trial))
 
+    def apply_params(self, version: int, vec) -> None:
+        """Install a broadcast wavefunction-parameter vector (opt-vmc).
+
+        Ordering contract with ``run_subblock`` (which reads the version
+        *before* the params): params are written first, version last, so a
+        torn concurrent read can only pair new params with the *old*
+        version stamp — that block is rejected by the solver's version
+        filter (conservative, unbiased), never silently accepted.
+        """
+        from repro.optimize.estimators import apply_vector
+        new = apply_vector(self.propagator.cfg, self.params,
+                           np.asarray(vec, np.float64))
+        self.params = new
+        self.params_version = int(version)
+
     def run_subblock(self, state, step: int):
         wkey, st = state
+        pv = self.params_version       # read version BEFORE params (see
+        params = self.params           # apply_params ordering contract)
         _, k_blocks = jax.random.split(wkey)
         key = jax.random.fold_in(k_blocks, step)
-        st, stats = self.driver.run_block(self.params, st, key)
+        st, stats = self.driver.run_block(params, st, key)
         ens = st.ens if hasattr(st, 'ens') else st
-        return ((wkey, st), BlockAccumulator.from_stats(stats),
-                np.asarray(ens.r), np.asarray(ens.e_loc))
+        acc = BlockAccumulator.from_stats(stats)
+        if getattr(self.propagator, 'n_opt', 0):
+            # host-side parameter-version stamp: rides the weighted-mean
+            # merge, so sub-blocks merged across a version change average
+            # to a fractional stamp and are rejected downstream
+            acc = dataclasses.replace(acc,
+                                      aux={**acc.aux, 'opt_pv': float(pv)})
+        return ((wkey, st), acc, np.asarray(ens.r), np.asarray(ens.e_loc))

@@ -59,6 +59,8 @@ class Worker:
         self.error: str | None = None
         # E_T feedback mailbox (manager writes, worker reads between blocks)
         self.e_trial_update: float | None = None
+        # parameter-broadcast mailbox (wavefunction optimization)
+        self.params_update: tuple | None = None
 
     def start(self):
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -67,6 +69,10 @@ class Worker:
     def send_e_trial(self, e_trial: float):
         """Between-block scalar feedback (the WorkerHandle mailbox)."""
         self.e_trial_update = float(e_trial)
+
+    def send_params(self, version: int, vec):
+        """Wavefunction-parameter broadcast (applied between blocks)."""
+        self.params_update = (int(version), np.asarray(vec, np.float64))
 
     def stop(self):
         """SIGTERM analogue: flush the in-flight partial block, then exit."""
@@ -94,6 +100,12 @@ class Worker:
                     state = self.sampler.set_e_trial(state,
                                                      self.e_trial_update)
                     self.e_trial_update = None
+                if self.params_update is not None:
+                    version, vec = self.params_update
+                    self.params_update = None
+                    apply = getattr(self.sampler, 'apply_params', None)
+                    if apply is not None:
+                        apply(version, vec)
                 acc = BlockAccumulator()
                 walkers = energies = None
                 for _ in range(self.subblocks_per_block):

@@ -1,7 +1,4 @@
-"""Partitioning: model/parameter sharding rules + the QMC walker mesh."""
+"""Sharding: the QMC walker mesh (device axis for ensemble sharding)."""
 from repro.sharding.ensemble import walkers_mesh
-from repro.sharding.partition import (LOGICAL_RULES, named_sharding_tree,
-                                      opt_state_specs, partition_spec_tree)
 
-__all__ = ['LOGICAL_RULES', 'named_sharding_tree', 'opt_state_specs',
-           'partition_spec_tree', 'walkers_mesh']
+__all__ = ['walkers_mesh']

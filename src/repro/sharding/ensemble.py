@@ -1,7 +1,6 @@
 """Walker-ensemble mesh: the ``walkers`` axis for the unified QMC driver.
 
-The model stack partitions *parameters* (partition.py); QMC partitions the
-*walker population*: a 1-D device mesh whose single ``walkers`` axis the
+QMC partitions the *walker population*: a 1-D device mesh whose single ``walkers`` axis the
 ``core.driver.EnsembleDriver`` shard_maps the ensemble's leading axis over.
 Per-walker RNG streams are keyed on global walker indices, so any mesh
 built here reproduces the single-device run: bit-identical trajectories

@@ -1,5 +1,14 @@
-from repro.train.optimizer import AdamWState, adamw_init, adamw_update
-from repro.train.step import make_train_step, train_step
+"""Synchronous-optimizer utilities repurposed for wavefunction optimization.
 
-__all__ = ['AdamWState', 'adamw_init', 'adamw_update', 'make_train_step',
-           'train_step']
+What survives of the excised LM training stack: the model-free AdamW
+update (``optimizer.py``) and the atomic-npz pytree checkpointing
+(``checkpoint.py``).  Both are consumed by ``repro.optimize`` — the VMC
+wavefunction-optimization subsystem — which checkpoints its parameter
+vector per SR/linear-method step under the run's CRC key.
+"""
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+
+__all__ = ['AdamWState', 'adamw_init', 'adamw_update', 'latest_step',
+           'restore_checkpoint', 'save_checkpoint']

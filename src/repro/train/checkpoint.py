@@ -1,10 +1,11 @@
-"""Checkpointing for the LM trainer: atomic npz snapshots of pytrees.
+"""Atomic npz snapshots of pytrees (the synchronous-loop checkpoint).
 
-Complements the QMC runtime's database-is-the-checkpoint design: the LM
-trainer is synchronous, so fault tolerance = periodic atomic snapshots +
-restart (plus the CRC run-key guard shared with the QMC side).  Writes are
-atomic (tmp + rename) so a mid-write crash never corrupts the latest good
-checkpoint; `latest_step` scans the directory on restart.
+Complements the QMC runtime's database-is-the-checkpoint design: the
+outer wavefunction-optimization loop (``repro.optimize``) is synchronous,
+so its fault tolerance = periodic atomic snapshots + restart (plus the
+CRC run-key guard shared with the QMC side).  Writes are atomic (tmp +
+rename) so a mid-write crash never corrupts the latest good checkpoint;
+`latest_step` scans the directory on restart.
 """
 from __future__ import annotations
 

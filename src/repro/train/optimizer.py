@@ -1,8 +1,8 @@
 """AdamW in plain JAX (f32 moments, decoupled weight decay).
 
-Kept dependency-free so the ZeRO-1 sharding of the moment tensors is fully
-controlled by `sharding.partition.opt_state_specs` (no optax pytree
-surprises in pjit sharding trees).
+Kept dependency-free (pure pytree-in, pytree-out) so any caller — today
+the wavefunction optimizer in ``repro.optimize`` — can drop it onto an
+arbitrary parameter tree without an optimizer-library dependency.
 """
 from __future__ import annotations
 

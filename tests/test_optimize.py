@@ -1,0 +1,366 @@
+"""VMC wavefunction optimization: estimators, solvers, loop, fault drills.
+
+Quick tier: parameter-derivative finite-difference oracles, the
+deterministic correlated-sampling SR/LM step checks, stale-block
+rejection, and checkpoint round-trips.  Slow tier: end-to-end ``opt-vmc``
+runs on the thread / process / grid backends including kill-and-replace
+and elastic-join parameter-broadcast drills (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip('jax')
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.driver import make_propagator  # noqa: E402
+from repro.core.wavefunction import log_psi, psi_state_batched  # noqa: E402
+from repro.launch.spec import RunSpec, build_run  # noqa: E402
+from repro.optimize import (clip_vector, collect_moments, lm_update,  # noqa: E402
+                            make_o_fn, n_params, opt_vector,
+                            params_from_vector, reweighted_energy,
+                            run_optimization, sr_matrices, sr_update)
+from repro.optimize.loop import OptResult  # noqa: E402
+from repro.optimize.solvers import Moments  # noqa: E402
+from repro.runtime.blocks import BlockAccumulator, BlockResult  # noqa: E402
+from repro.runtime.samplers import BlockSampler  # noqa: E402
+from repro.systems import build_system  # noqa: E402
+from repro.train.checkpoint import (latest_step, restore_checkpoint,  # noqa: E402
+                                    save_checkpoint)
+
+
+def fd_gradient(cfg, params, vec, r, eps=1e-3):
+    """Central finite difference of ln|Psi| wrt the parameter vector."""
+    out = np.zeros_like(vec)
+    for i in range(len(vec)):
+        vp, vm = vec.copy(), vec.copy()
+        vp[i] += eps
+        vm[i] -= eps
+        lp = log_psi(cfg, params_from_vector(
+            cfg, params, jnp.asarray(vp, jnp.float32)), r)[1]
+        lm = log_psi(cfg, params_from_vector(
+            cfg, params, jnp.asarray(vm, jnp.float32)), r)[1]
+        out[i] = (float(lp) - float(lm)) / (2 * eps)
+    return out
+
+
+def sample_moments(cfg, params, vec, R):
+    """Direct (single-process) moment estimates on a fixed walker sample."""
+    o_fn = make_o_fn(cfg)
+    vj = jnp.asarray(vec, jnp.float32)
+    O = np.asarray(jax.vmap(o_fn, in_axes=(None, None, 0))(vj, params, R),
+                   np.float64)
+    E = np.asarray(psi_state_batched(cfg, params, R).e_loc, np.float64)
+    OO = O[:, :, None] * O[:, None, :]
+    return Moments(weight=float(len(E)), n_blocks=1, e=E.mean(),
+                   e2=(E * E).mean(), o=O.mean(0), eo=(O * E[:, None]).mean(0),
+                   oo=OO.mean(0), oeo=(OO * E[:, None, None]).mean(0))
+
+
+def equilibrated_walkers(cfg, params, n_walkers=64, seed=5, subblocks=6):
+    """Walker sample off the plain-VMC sampler (fixed seed)."""
+    prop = make_propagator('vmc', cfg, tau=0.3, e_trial=None, equil_steps=0)
+    samp = BlockSampler(prop, params, n_walkers=n_walkers, steps=50)
+    state = samp.init_state(0, seed=seed)
+    w = None
+    for step in range(subblocks):
+        state, _, w, _ = samp.run_subblock(state, step)
+    return jnp.asarray(w, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# parameter-derivative estimators vs finite differences
+# ---------------------------------------------------------------------------
+def test_o_matches_finite_difference_jastrow():
+    """O_i = d ln|Psi| / d p_i for the three Jastrow parameters (H2)."""
+    cfg, params = build_system('h2')
+    assert n_params(cfg) == 3
+    vec = opt_vector(cfg, params)
+    rng = np.random.default_rng(0)
+    o_fn = make_o_fn(cfg)
+    for trial in range(3):
+        r = jnp.asarray(rng.normal(size=(cfg.n_up + cfg.n_dn, 3)),
+                        jnp.float32)
+        O = np.asarray(o_fn(jnp.asarray(vec, jnp.float32), params, r))
+        np.testing.assert_allclose(O, fd_gradient(cfg, params, vec, r),
+                                   atol=5e-3)
+
+
+def test_o_matches_finite_difference_ci():
+    """O_i for the CI coefficients of a synthetic 4-det H2 wavefunction."""
+    cfg, params = build_system('h2', n_det=4, ci_seed=1)
+    assert n_params(cfg) == 7                  # 3 Jastrow + 4 CI
+    vec = opt_vector(cfg, params)
+    rng = np.random.default_rng(1)
+    o_fn = make_o_fn(cfg)
+    for trial in range(3):
+        r = jnp.asarray(rng.normal(size=(cfg.n_up + cfg.n_dn, 3)),
+                        jnp.float32)
+        O = np.asarray(o_fn(jnp.asarray(vec, jnp.float32), params, r))
+        np.testing.assert_allclose(O, fd_gradient(cfg, params, vec, r),
+                                   atol=5e-3)
+
+
+def test_opt_vector_roundtrip_and_clip():
+    """vector -> params -> vector round-trips; clip enforces the domain."""
+    cfg, params = build_system('h2', n_det=4, ci_seed=1)
+    vec = opt_vector(cfg, params)
+    p2 = params_from_vector(cfg, params, jnp.asarray(vec, jnp.float32))
+    np.testing.assert_allclose(np.asarray(p2.jastrow), vec[:3], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p2.ci_coeffs), vec[3:], rtol=1e-6)
+    bad = np.array([-3.0, 0.0, 1.0, 2.0, 0.0, 0.0, 0.0])
+    clipped = clip_vector(cfg, bad)
+    assert clipped[0] > 0 and clipped[1] > 0          # b's forced positive
+    np.testing.assert_allclose(np.linalg.norm(clipped[3:]), 1.0, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# SR / LM solve on a fixed sample (deterministic, correlated sampling)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_sr_step_lowers_reweighted_energy():
+    """One damped SR step strictly lowers the correlated-sampling energy
+    evaluated on the *same* fixed walker sample (zero MC noise in the
+    comparison)."""
+    cfg, params = build_system('h2')
+    vec = opt_vector(cfg, params)
+    R = equilibrated_walkers(cfg, params)
+    m = sample_moments(cfg, params, vec, R)
+    S, g = sr_matrices(m)
+    assert np.all(np.linalg.eigvalsh(S) > -1e-6)      # metric is PSD
+    e0 = reweighted_energy(cfg, params, vec, R)
+    v1 = clip_vector(cfg, sr_update(m, vec, lr=0.1, damping=1e-2))
+    e1 = reweighted_energy(cfg, params, v1, R)
+    assert e1 < e0, (e0, e1)
+
+
+@pytest.mark.slow
+def test_lm_step_lowers_reweighted_energy():
+    """The linear-method update off the same moments also descends."""
+    cfg, params = build_system('h2')
+    vec = opt_vector(cfg, params)
+    R = equilibrated_walkers(cfg, params)
+    m = sample_moments(cfg, params, vec, R)
+    e0 = reweighted_energy(cfg, params, vec, R)
+    v1 = clip_vector(cfg, lm_update(m, vec, damping=0.1, max_norm=0.5))
+    e1 = reweighted_energy(cfg, params, v1, R)
+    assert e1 < e0, (e0, e1)
+
+
+# ---------------------------------------------------------------------------
+# stale-block rejection (the parameter-version protocol)
+# ---------------------------------------------------------------------------
+def _block(pv, weight=10.0, o=1.0):
+    aux = {'opt_o/0': o, 'opt_eo/0': o, 'opt_oo/0/0': o, 'opt_oeo/0/0': o}
+    if pv is not None:
+        aux['opt_pv'] = pv
+    return BlockResult(run_key='k', worker_id=0, block_id=0, weight=weight,
+                       e_mean=-1.0, e2_mean=2.0, aux=aux)
+
+
+def test_collect_moments_rejects_stale_blocks():
+    """Blocks with a different, fractional, or missing version stamp never
+    enter the solve; only exact current-version blocks are merged."""
+    blocks = [_block(2.0, o=1.0), _block(2.0, o=3.0),   # current version
+              _block(1.0, o=100.0),                     # stale
+              _block(1.5, o=100.0),                     # merged across bump
+              _block(None, o=100.0)]                    # unstamped (not opt)
+    m = collect_moments(blocks, n_opt=1, version=2)
+    assert m is not None and m.n_blocks == 2
+    assert m.o[0] == pytest.approx(2.0)                 # mean of 1 and 3
+    assert collect_moments(blocks, n_opt=1, version=7) is None
+
+
+def test_cross_version_merge_produces_fractional_stamp():
+    """The worker-side weighted merge of sub-blocks straddling a version
+    bump yields a non-integer opt_pv — exactly what collect_moments
+    rejects."""
+    a = BlockAccumulator(10.0, -1.0, 2.0, {'opt_pv': 1.0})
+    b = BlockAccumulator(10.0, -1.0, 2.0, {'opt_pv': 2.0})
+    merged = a.merge(b)
+    assert merged.aux['opt_pv'] == pytest.approx(1.5)
+    assert merged.aux['opt_pv'] != 1.0 and merged.aux['opt_pv'] != 2.0
+
+
+def test_sampler_stamps_current_version():
+    """BlockSampler stamps opt_pv and apply_params flips it atomically."""
+    cfg, params = build_system('h2')
+    prop = make_propagator('opt-vmc', cfg, tau=0.3, e_trial=None,
+                           equil_steps=0)
+    samp = BlockSampler(prop, params, n_walkers=8, steps=3)
+    state = samp.init_state(0, seed=0)
+    state, acc, _, _ = samp.run_subblock(state, 0)
+    assert acc.aux['opt_pv'] == 0.0
+    vec = opt_vector(cfg, params)
+    vec[0] += 0.125
+    samp.apply_params(3, vec)
+    state, acc, _, _ = samp.run_subblock(state, 1)
+    assert acc.aux['opt_pv'] == 3.0
+    assert float(np.asarray(samp.params.jastrow.b_ee)) == pytest.approx(
+        1.125)
+    # the moment arrays rode along as flattened scalar keys
+    assert 'opt_o/0' in acc.aux and 'opt_oo/0/0' in acc.aux
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_bitwise(tmp_path):
+    """save -> restore reproduces the step-k vector bitwise and refuses a
+    foreign run key."""
+    d = str(tmp_path)
+    vec = np.array([1.0, 2.0, np.pi], np.float64)
+    save_checkpoint(d, 4, {'vec': vec}, run_key='abc')
+    assert latest_step(d) == 4
+    tree, k = restore_checkpoint(d, {'vec': np.zeros(3)}, run_key='abc')
+    assert k == 4
+    assert np.array_equal(tree['vec'], vec)            # bitwise
+    with pytest.raises(ValueError, match='refusing'):
+        restore_checkpoint(d, {'vec': np.zeros(3)}, run_key='other')
+
+
+# ---------------------------------------------------------------------------
+# end-to-end optimization runs (slow tier)
+# ---------------------------------------------------------------------------
+def opt_spec(**kw):
+    base = dict(system='h2', method='opt-vmc', backend='thread', n_workers=2,
+                n_walkers=16, steps=10, subblocks_per_block=2, opt_steps=5,
+                opt_blocks_per_step=4, seed=3, db=':memory:')
+    base.update(kw)
+    return RunSpec(**base)
+
+
+@pytest.mark.slow
+def test_opt_vmc_thread_end_to_end(tmp_path):
+    """5 SR steps on H2 (thread backend): energy decreases modulo noise,
+    every step checkpoints, and a second run resumes at the right step
+    with bitwise-identical parameters."""
+    ckpt = str(tmp_path / 'ckpt')
+    db = str(tmp_path / 'run.sqlite')
+    run = build_run(opt_spec(opt_steps=5, ckpt_dir=ckpt, db=db,
+                             n_walkers=32, steps=20, opt_blocks_per_step=6))
+    res = run.run()
+    assert isinstance(res, OptResult)
+    assert not run.worker_errors(), run.worker_errors()
+    assert [s.step for s in res.steps] == [0, 1, 2, 3, 4]
+    es = res.energies()
+    assert es[-1] < es[0] - 0.02                 # net improvement
+    # monotone modulo noise: each step improves or backtracks < 3 sigma
+    for a, b in zip(res.steps, res.steps[1:]):
+        assert b.energy < a.energy + 3 * max(a.error + b.error, 1e-3), es
+    assert latest_step(ckpt) == 4                # checkpointed every step
+
+    # resume: picks up at step 5 with the exact final vector of run 1
+    run2 = build_run(opt_spec(opt_steps=7, ckpt_dir=ckpt, db=db,
+                              n_walkers=32, steps=20, opt_blocks_per_step=6))
+    res2 = run2.run()
+    assert [s.step for s in res2.steps] == [5, 6]
+    assert np.array_equal(res2.steps[0].vec, res.vec)  # bitwise restore
+
+
+@pytest.mark.slow
+def test_opt_vmc_ci_parameters_move():
+    """Optimizing a synthetic multidet H2: CI coefficients actually move
+    and stay unit-normalized (the gauge fix)."""
+    run = build_run(opt_spec(n_det=4, opt_steps=2, opt_blocks_per_step=3))
+    res = run.run()
+    assert not run.worker_errors(), run.worker_errors()
+    v0, v1 = res.steps[0].vec, res.vec
+    assert v0.shape == (7,)
+    assert not np.allclose(v0[3:], v1[3:])
+    np.testing.assert_allclose(np.linalg.norm(v1[3:]), 1.0, rtol=1e-9)
+
+
+@pytest.mark.slow
+def test_opt_vmc_process_kill_and_replace_drill():
+    """Process backend: SIGKILL a worker between steps, add a replacement;
+    the replacement boots with the *current* broadcast vector, so every
+    block it ever stamps carries an integer version >= the version at its
+    spawn — no stale-parameter samples enter later solves."""
+    run = build_run(opt_spec(backend='process', opt_steps=4,
+                             opt_blocks_per_step=3))
+    state = {}
+
+    def drill(step, mgr, vec):
+        if step == 0:
+            victim = mgr.workers[0]
+            mgr.remove_worker(victim, graceful=False)
+            state['new'] = mgr.add_worker().worker_id
+            state['version'] = 1             # version broadcast at spawn
+        if step == 3:                        # hold the run open until the
+            deadline = time.monotonic() + 120   # replacement contributes
+            while time.monotonic() < deadline:
+                mgr.poll()
+                if any(b.worker_id == state['new']
+                       for b in mgr.db.blocks(run.run_key)):
+                    return
+                time.sleep(0.1)
+            raise AssertionError('replacement worker never produced blocks')
+
+    res = run_optimization(run, on_step=drill, step_timeout=120)
+    assert len(res.steps) == 4
+    pvs = {b.aux['opt_pv'] for b in run.db.blocks(run.run_key)
+           if b.worker_id == state['new'] and 'opt_pv' in b.aux}
+    assert pvs, 'replacement produced no stamped blocks'
+    assert min(pvs) >= state['version'], pvs
+    assert all(float(p).is_integer() for p in pvs), pvs
+
+
+@pytest.mark.slow
+def test_opt_vmc_grid_elastic_join_gets_current_params():
+    """Grid backend: an elastic worker joining mid-optimization receives
+    the current parameter vector in its WELCOME — its first stamped block
+    already carries the current (integer) version, never version 0."""
+    run = build_run(opt_spec(backend='grid', opt_steps=4,
+                             opt_blocks_per_step=3))
+    state = {}
+
+    def drill(step, mgr, vec):
+        if step == 0:
+            state['new'] = mgr.add_worker().worker_id
+            state['version'] = 1
+        if step == 3:
+            deadline = time.monotonic() + 120
+            while time.monotonic() < deadline:
+                mgr.poll()
+                if any(b.worker_id == state['new']
+                       for b in mgr.db.blocks(run.run_key)):
+                    return
+                time.sleep(0.1)
+            raise AssertionError('elastic worker never produced blocks')
+
+    res = run_optimization(run, on_step=drill, step_timeout=120)
+    assert len(res.steps) == 4
+    assert not run.worker_errors(), run.worker_errors()
+    pvs = {b.aux['opt_pv'] for b in run.db.blocks(run.run_key)
+           if b.worker_id == state['new'] and 'opt_pv' in b.aux}
+    assert pvs, 'elastic worker produced no stamped blocks'
+    assert min(pvs) >= state['version'], pvs
+    assert all(float(p).is_integer() for p in pvs), pvs
+
+
+# ---------------------------------------------------------------------------
+# spec / CLI wiring
+# ---------------------------------------------------------------------------
+def test_runspec_opt_validation():
+    with pytest.raises(ValueError, match='opt_solver'):
+        RunSpec(opt_solver='adam')
+    with pytest.raises(ValueError, match='opt_steps'):
+        RunSpec(opt_steps=0)
+    s = RunSpec(method='opt-vmc', opt_solver='lm')
+    assert s.resolved_tau() == pytest.approx(0.3)
+
+
+def test_qmc_run_cli_parses_opt_flags():
+    from repro.launch.qmc_run import parse_spec
+    s = parse_spec(['--method', 'opt-vmc', '--opt-steps', '7',
+                    '--opt-solver', 'lm', '--opt-lr', '0.2',
+                    '--sr-damping', '0.05', '--opt-blocks', '9',
+                    '--ckpt-dir', '/tmp/x'])
+    assert s.method == 'opt-vmc' and s.opt_steps == 7
+    assert s.opt_solver == 'lm' and s.opt_lr == pytest.approx(0.2)
+    assert s.sr_damping == pytest.approx(0.05)
+    assert s.opt_blocks_per_step == 9 and s.ckpt_dir == '/tmp/x'

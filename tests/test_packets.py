@@ -125,3 +125,23 @@ def test_walkers_roundtrip():
 def test_json_roundtrip():
     obj = {'worker_id': 3, 'rate': 12.5, 'nested': {'a': [1, 2, 3]}}
     assert packets.decode_json(packets.encode_json(obj)) == obj
+
+
+def test_encode_blocks_large_aux_roundtrip():
+    """An opt-vmc block's flattened moment matrices (O(P^2) aux entries,
+    far beyond 64 kB of JSON) survive the wire — the aux field carries a
+    u32 length prefix (wire VERSION 2)."""
+    aux = {f'opt_oo/{i}/{j}': float(i * j)
+           for i in range(103) for j in range(103)}
+    aux['opt_pv'] = 4.0
+    b = BlockResult('k', 1, 2, 10.0, -1.0, 2.0, aux=aux)
+    out = packets.decode_blocks(packets.encode_blocks([b]))
+    assert out == [b]
+
+
+def test_params_roundtrip():
+    version, vec = packets.decode_params(
+        packets.encode_params(7, np.array([1.0, -2.5, 3.25])))
+    assert version == 7
+    np.testing.assert_array_equal(vec, [1.0, -2.5, 3.25])
+    assert vec.dtype == np.float64
