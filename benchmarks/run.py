@@ -20,7 +20,10 @@ TCP grid-backend efficiency table (localhost qmc_worker subprocesses over
 sockets vs thread/process at equal worker counts); Table XII is the
 wavefunction-optimization table (opt-vmc energy/variance trajectory at
 n_det = 1/100 plus the per-sub-block moment-accumulation overhead vs
-plain VMC).
+plain VMC); Table XIII is the distance-screening scaling law (per-SEM-sweep
+wavefunction-construction cost, screened vs dense, over the growing
+``synthetic_chain`` systems, with fitted log-log exponents — the rows
+``tools/bench_gate.py`` gates against the committed BENCH_scaling.json).
 TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
@@ -44,7 +47,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
     ap.add_argument('--tables',
-                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII')
+                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII,XIII')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -55,7 +58,7 @@ def main(argv=None) -> int:
            'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
            'VIII': T.table_sem, 'IX': T.table_runtime,
            'X': T.table_multidet, 'XI': T.table_grid,
-           'XII': T.table_opt}
+           'XII': T.table_opt, 'XIII': T.table_scaling}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

@@ -658,3 +658,117 @@ def table_opt(quick=True):
             opt_s=round(times['opt-vmc'], 5),
             overhead=round(times['opt-vmc'] / times['vmc'], 2)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Table XIII: distance-screened pipeline — wavefunction cost per SEM sweep
+# ---------------------------------------------------------------------------
+def table_scaling(quick=True):
+    """Scaling law of wavefunction construction, screened vs dense.
+
+    For a growing extended peptide chain (``systems.bench.synthetic_chain``,
+    spanning the paper's Table IV range 158 -> 1731 electrons) time the two
+    wavefunction-construction components of one single-electron-move sweep
+    at W = 1 walker:
+
+    * ``mo_pass_s`` — one full MO-tensor pass (B -> C = A @ B), the
+      once-per-sweep energy/drift evaluation;
+    * ``moves_s``   — a sweep's worth (n_e) of sequential per-move orbital
+      evaluations (AO values at the proposed point + the phi row product),
+      jitted as one ``lax.scan`` so Python dispatch stays out of the fit.
+
+    ``sweep_s = mo_pass_s + moves_s`` deliberately EXCLUDES the
+    Sherman–Morrison inverse-update algebra: that part is O(n_e^2) per
+    sweep for *any* orbital-evaluation strategy (Table VIII measures it);
+    this table isolates exactly the cost the paper's §II-§III screening
+    attacks.  Screened rows run at eps = 0 — bitwise-identical physics to
+    the dense rows (tests/test_screening.py) — so the fitted exponent gap
+    is pure structure exploitation, not a tolerance trade.
+
+    The last rows fit log-log slopes over the size series; the committed
+    ``BENCH_scaling.json`` gates the ``exponent`` metric through
+    ``tools/bench_gate.py`` (screened must stay sub-quadratic).
+    ``*_mb`` columns are the ``screening.memory_budget`` peak-footprint
+    estimates for one full pass (paper idea ii.).
+    """
+    from repro.core import aos
+    from repro.core import screening as scr_mod
+    from repro.core import wavefunction as wf
+    from repro.systems.bench import build_bench_wavefunction, synthetic_chain
+
+    sizes = [158, 434, 872] if quick else [158, 434, 872, 1056, 1731]
+    rows = []
+    series = {'screened': [], 'dense': []}
+    for n_elec in sizes:
+        s = synthetic_chain(n_elec)
+        n_e = s.mol.n_elec
+        r = _electron_positions(s, seed=3)
+        r_prop = r + 0.3                     # a sweep's proposed positions
+
+        for label in ('screened', 'dense'):
+            cfg, params = build_bench_wavefunction(
+                s, method='sparse' if label == 'screened' else 'dense',
+                screen_eps=0.0 if label == 'screened' else None)
+            bas, A = cfg.basis, params.mo
+
+            f_full = jax.jit(lambda p, rr, cfg=cfg:
+                             wf._mo_tensor(cfg, p, rr)[0])
+            t_full = _timeit(f_full, params, r)
+
+            if label == 'screened':
+                scr = cfg.screening
+
+                def f_moves(p, rp, cfg=cfg, scr=scr, bas=bas):
+                    def body(acc, point):
+                        pt = point[None]
+                        idx, act, _ = scr_mod.active_ao_lists(scr, pt)
+                        vals = aos.eval_ao_values_screened(
+                            bas, p.coords, pt, idx, act)
+                        if scr.mo_cells is not None:
+                            mo_idx, mo_valid = scr_mod.active_mo_lists(
+                                scr, pt)
+                            phi = scr_mod.gather_phi(p.mo, idx, vals,
+                                                     mo_idx, mo_valid,
+                                                     chunk=1)
+                        else:
+                            phi = scr_mod.phi_from_packed(p.mo, idx, vals,
+                                                          bas.n_ao)
+                        return acc + jnp.sum(phi), None
+                    out, _ = jax.lax.scan(body, jnp.float32(0), rp)
+                    return out
+            else:
+                def f_moves(p, rp, bas=bas):
+                    def body(acc, point):
+                        v, _ = aos.eval_ao_values(bas, p.coords, point[None])
+                        return acc + jnp.sum(p.mo @ v), None
+                    out, _ = jax.lax.scan(body, jnp.float32(0), rp)
+                    return out
+            t_moves = _timeit(jax.jit(f_moves), params, r_prop)
+
+            sweep = t_full + t_moves
+            series[label].append((n_e, sweep))
+            mb = scr_mod.memory_budget(
+                cfg.screening if label == 'screened'
+                else scr_mod.build_screening(bas, s.mol.coords, A, eps=-1.0),
+                bas, n_e, A.shape[0])
+            rows.append(dict(
+                table='XIII', system=s.name, n_elec=n_e, n_ao=bas.n_ao,
+                method=label,
+                ao_budget=(cfg.screening.ao_budget
+                           if label == 'screened' else bas.n_ao),
+                mo_budget=(cfg.screening.mo_budget
+                           if label == 'screened' else 0),
+                mo_pass_s=round(t_full, 4), moves_s=round(t_moves, 4),
+                sweep_s=round(sweep, 4),
+                mem_mb=round((mb['screened_total'] if label == 'screened'
+                              else mb['dense_total']) / 2**20, 1)))
+
+    for label, pts in series.items():
+        n = np.array([p[0] for p in pts], float)
+        t = np.array([p[1] for p in pts], float)
+        slope = float(np.polyfit(np.log(n), np.log(t), 1)[0])
+        rows.append(dict(
+            table='XIII', system='chain-fit', method=label,
+            n_min=int(n[0]), n_max=int(n[-1]),
+            exponent=round(slope, 3)))
+    return rows

@@ -171,6 +171,95 @@ def eval_ao_values(basis: BasisSet, coords: jnp.ndarray,
     return val.T, atom_active
 
 
+# trace-time counter of ao_mask fallback rebuilds in ``active_ao_indices``
+# (tests assert the per-sweep pipeline always passes the hoisted mask)
+_MASK_FALLBACKS = 0
+
+
+def mask_fallback_count() -> int:
+    """Times ``active_ao_indices`` rebuilt the (n_e, n_ao) mask itself."""
+    return _MASK_FALLBACKS
+
+
+def eval_ao_block_screened(basis: BasisSet, coords: jnp.ndarray,
+                           r_elec: jnp.ndarray, idx: jnp.ndarray,
+                           active: jnp.ndarray):
+    """Screened AO evaluation: only the candidate (electron, AO) pairs.
+
+    The packed-CSR sibling of ``eval_ao_block``: instead of the full
+    (n_ao, N, 5) B it evaluates value/gradient/Laplacian at the gathered
+    candidate AOs of each electron — O(N * budget) work and memory, the
+    linear-scaling pipeline of ``core.screening``.  Per-element arithmetic
+    is identical to the dense path, so an active slot's value is bitwise
+    equal to the corresponding dense B entry.
+
+    Args:
+      basis: BasisSet (host numpy arrays; closed over as constants).
+      coords: (n_atoms, 3) nuclear positions.
+      r_elec: (N, 3) electron positions (any walker-flattened batch).
+      idx: (N, K) candidate AO ids (``screening.active_ao_lists``).
+      active: (N, K) bool — inside-cutoff mask; inactive slots zero.
+
+    Returns Bp: (N, K, 5) float32 packed values (zeros at inactive slots).
+    """
+    ao_atom = jnp.asarray(basis.ao_atom)[idx]             # (N, K)
+    ao_pow = jnp.asarray(basis.ao_pow)[idx]               # (N, K, 3)
+    prim_c = jnp.asarray(basis.prim_coeff)[idx]           # (N, K, P)
+    prim_a = jnp.asarray(basis.prim_exp)[idx]
+
+    d = r_elec[..., None, :] - coords[ao_atom]            # (N, K, 3)
+    r2 = jnp.sum(d * d, axis=-1)                          # (N, K)
+    expo = jnp.exp(-prim_a * r2[..., None])               # (N, K, P)
+    g = jnp.sum(prim_c * expo, axis=-1)
+    gp = jnp.sum(-prim_a * prim_c * expo, axis=-1)
+    gpp = jnp.sum(prim_a ** 2 * prim_c * expo, axis=-1)
+
+    fs, dfs, d2fs = [], [], []
+    for l in range(3):
+        f, df, d2f = _monomial_1d(d[..., l], ao_pow[..., l])
+        fs.append(f); dfs.append(df); d2fs.append(d2f)
+    poly = fs[0] * fs[1] * fs[2]
+
+    val = poly * g
+    grads = []
+    for l in range(3):
+        others = fs[(l + 1) % 3] * fs[(l + 2) % 3]
+        grads.append(dfs[l] * others * g + poly * 2.0 * d[..., l] * gp)
+    lap = jnp.zeros_like(val)
+    for l in range(3):
+        others = fs[(l + 1) % 3] * fs[(l + 2) % 3]
+        x = d[..., l]
+        lap = lap + (d2fs[l] * others * g
+                     + 2.0 * dfs[l] * others * 2.0 * x * gp
+                     + poly * (2.0 * gp + 4.0 * x * x * gpp))
+    Bp = jnp.stack([val] + grads + [lap], axis=-1)        # (N, K, 5)
+    return jnp.where(active[..., None], Bp, 0.0)
+
+
+def eval_ao_values_screened(basis: BasisSet, coords: jnp.ndarray,
+                            r_elec: jnp.ndarray, idx: jnp.ndarray,
+                            active: jnp.ndarray):
+    """Screened AO *values only* — the single-electron-move fast path.
+
+    ``eval_ao_values`` restricted to each point's candidate list: O(K) per
+    proposed move instead of O(n_ao).  Returns vals: (N, K), zeros at
+    inactive slots.
+    """
+    ao_atom = jnp.asarray(basis.ao_atom)[idx]
+    ao_pow = jnp.asarray(basis.ao_pow)[idx]
+    prim_c = jnp.asarray(basis.prim_coeff)[idx]
+    prim_a = jnp.asarray(basis.prim_exp)[idx]
+    d = r_elec[..., None, :] - coords[ao_atom]
+    r2 = jnp.sum(d * d, axis=-1)
+    expo = jnp.exp(-prim_a * r2[..., None])
+    g = jnp.sum(prim_c * expo, axis=-1)
+    poly = jnp.ones_like(g)
+    for l in range(3):
+        f, _, _ = _monomial_1d(d[..., l], ao_pow[..., l])
+        poly = poly * f
+    return jnp.where(active, poly * g, 0.0)
+
+
 def active_ao_indices(basis: BasisSet, atom_active: jnp.ndarray, k_max: int,
                       ao_mask: jnp.ndarray = None):
     """Per-electron padded active-AO index lists (paper's ``indices`` array).
@@ -180,7 +269,10 @@ def active_ao_indices(basis: BasisSet, atom_active: jnp.ndarray, k_max: int,
       k_max: pad/truncate length (multiple of 128 for the TPU kernel).
       ao_mask: optional precomputed ``atom_active[:, ao_atom]`` (n_e, n_ao)
         — callers that already expanded the atom mask (sparsity stats) pass
-        it to skip the second gather.
+        it to skip the second gather.  Every per-sweep caller does; the
+        fallback below re-materializes the (n_e, n_ao) product and exists
+        only for API compatibility (``mask_fallback_count`` lets tests
+        assert the hot path never takes it).
 
     Returns:
       idx: (n_e, k_max) int32 — active AO indices, ascending, padded with 0.
@@ -189,6 +281,8 @@ def active_ao_indices(basis: BasisSet, atom_active: jnp.ndarray, k_max: int,
         callers assert/monitor overflow; the dense path is exact regardless).
     """
     if ao_mask is None:
+        global _MASK_FALLBACKS
+        _MASK_FALLBACKS += 1
         ao_mask = atom_active[:, jnp.asarray(basis.ao_atom)]  # (n_e, n_ao)
     mask = ao_mask
     count = jnp.sum(mask.astype(jnp.int32), axis=-1)

@@ -128,6 +128,31 @@ def build_basis(shells: Sequence[Shell], n_atoms: int,
     )
 
 
+def ao_cutoff_radii(basis: BasisSet, eps: float) -> np.ndarray:
+    """Per-AO screening radii at tolerance ``eps`` (paper §II's cutoffs).
+
+    The contracted radial part of each AO decays monotonically past its
+    outermost maximum, so there is a radius beyond which |g(r)| < eps for
+    THAT shell alone — tighter than the per-atom ``atom_radius2`` (which is
+    the max over the atom's shells at the fixed ``EPS_AO``).  Distance
+    screening (``core.screening``) drops (electron, AO) pairs beyond these
+    radii; the bound on what is dropped is |chi| <= eps * |poly| at the
+    cutoff sphere (DESIGN.md §11 for the resulting log|Psi| bound).
+
+    ``eps <= 0`` returns +inf radii (no tolerance cutoff — only the exact
+    ``atom_radius2`` zero structure remains when the caller intersects with
+    it).  Padding primitives (coefficient 0) contribute nothing.
+    """
+    if eps <= 0.0:
+        return np.full((basis.n_ao,), np.inf, np.float64)
+    out = np.empty((basis.n_ao,), np.float64)
+    for j in range(basis.n_ao):
+        keep = np.abs(basis.prim_coeff[j]) > 0
+        out[j] = _radius_for(basis.prim_exp[j][keep].tolist(),
+                             basis.prim_coeff[j][keep].tolist(), eps)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Small built-in basis library (enough for tests + procedural benchmarks).
 # Exponents/coefficients follow the STO-3G / 6-31G family patterns.

@@ -81,3 +81,58 @@ def mo_products_sparse(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
          idx_.reshape(nb, chunk, idx.shape[1])))
     C = jnp.moveaxis(Cs, 0, 1).reshape(A.shape[0], nb * chunk, 5)
     return C[:, :n_e]
+
+
+def mo_products_screened(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
+                         mo_idx: jnp.ndarray, mo_valid: jnp.ndarray,
+                         chunk: int = 0) -> jnp.ndarray:
+    """Doubly screened product: active MOs x active AOs per electron.
+
+    The linear-scaling hot path (paper §II + the Alfè–Gillan orbital
+    cutoff): per electron only its active-MO rows are computed, each as a
+    contraction over its active-AO columns — a double-gathered
+    (chunk, K_mo, K_ao) panel of A against the packed B rows, then a
+    scatter of the active panel into the dense C.  Rows outside an
+    electron's MO reach are *exact zeros* of the dense product
+    (``screening.build_screening`` derives the reach from A's support), so
+    this path adds no error beyond the AO tolerance.  O(n_e * K_mo * K_ao)
+    flops — constant per electron, linear in system size.
+
+    Args:
+      A:   (n_rows, n_ao) dense MO coefficients.
+      Bp:  (n_e, K_ao, 5) packed active-AO values (zeros at padding).
+      idx: (n_e, K_ao) candidate AO ids.
+      mo_idx / mo_valid: (n_e, K_mo) active-MO lists
+        (``screening.active_mo_lists``).
+      chunk: electron-block size for the scan; 0 -> ``default_chunk``.
+
+    Returns C: (n_rows, n_e, 5).
+    """
+    n_rows = A.shape[0]
+    n_e = Bp.shape[0]
+    if chunk <= 0:
+        chunk = default_chunk(n_e)
+    chunk = min(chunk, n_e)
+    mi = jnp.where(mo_valid, mo_idx, 0)
+    pad = (-n_e) % chunk
+    Bp_ = jnp.pad(Bp, ((0, pad), (0, 0), (0, 0)))
+    idx_ = jnp.pad(idx, ((0, pad), (0, 0)))
+    mi_ = jnp.pad(mi, ((0, pad), (0, 0)))
+    mv_ = jnp.pad(mo_valid, ((0, pad), (0, 0)))
+    nb = Bp_.shape[0] // chunk
+
+    def _body(carry, eb):
+        bp, ix, m, ok = eb
+        Asub = A[m[:, :, None], ix[:, None, :]]    # (chunk, K_mo, K_ao)
+        c = jnp.einsum('emk,ekf->emf', Asub, bp,
+                       preferred_element_type=jnp.float32)
+        return carry, jnp.where(ok[..., None], c, 0.0)
+
+    _, Cs = jax.lax.scan(
+        _body, 0.,
+        (Bp_.reshape(nb, chunk, *Bp.shape[1:]),
+         idx_.reshape(nb, chunk, -1),
+         mi_.reshape(nb, chunk, -1), mv_.reshape(nb, chunk, -1)))
+    Cp = Cs.reshape(nb * chunk, *Cs.shape[2:])[:n_e]     # (n_e, K_mo, 5)
+    C = jnp.zeros((n_rows, n_e, 5), Cp.dtype)
+    return C.at[mi, jnp.arange(n_e)[:, None]].add(Cp, mode='drop')

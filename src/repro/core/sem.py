@@ -272,8 +272,25 @@ def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
         eta, u_rand = jax.vmap(_draw)(keys)
         r_old = r[:, j]                                   # (W, 3)
         r_new = r_old + step_size * eta
-        vals, _ = aos.eval_ao_values(cfg.basis, coords, r_new)  # (ao, W)
-        v_all = (A_blk @ vals).T                 # (W, n_occ | n_orb)
+        scr = cfg.screening
+        if scr is not None and not scr.exhaustive:
+            # screened per-move path: only active (electron, AO) pairs are
+            # evaluated, and with MO reach radii only active orbital rows
+            # are contracted — O(budget) per proposal instead of O(n_ao)
+            from . import screening as scr_mod
+            a_idx, a_act, _ = scr_mod.active_ao_lists(scr, r_new)
+            vals_p = aos.eval_ao_values_screened(cfg.basis, coords, r_new,
+                                                 a_idx, a_act)   # (W, K)
+            if scr.mo_cells is not None:
+                mo_idx, mo_valid = scr_mod.active_mo_lists(scr, r_new)
+                v_all = scr_mod.gather_phi(A_blk, a_idx, vals_p, mo_idx,
+                                           mo_valid)
+            else:
+                v_all = scr_mod.phi_from_packed(A_blk, a_idx, vals_p,
+                                                cfg.basis.n_ao)
+        else:
+            vals, _ = aos.eval_ao_values(cfg.basis, coords, r_new)  # (ao,W)
+            v_all = (A_blk @ vals).T             # (W, n_occ | n_orb)
         phi = v_all[:, :minv.shape[-1]]          # occupied panel
         ratio = jnp.einsum('wo,wo->w', minv[:, e, :], phi)
         d_jas = jax.vmap(

@@ -190,3 +190,16 @@ def det_ratio_rank_k(Minv: jnp.ndarray, Phi_new: jnp.ndarray,
         js.shape[0])].set(1.0)                # unit columns e_{j_a}
     Minv_new = Minv - (U - E) @ (inv_small(T, ratio) @ Mj)
     return ratio, Minv_new
+
+
+def state_bytes(n_up: int, n_dn: int, n_walkers: int = 1,
+                bytes_per: int = 4) -> int:
+    """Bytes of the maintained per-walker Slater state (paper idea ii.).
+
+    The single-electron-move pipeline keeps one inverse Slater matrix per
+    spin block plus the running sign/log-determinant scalars per walker —
+    the irreducible O(n^2) footprint the screened pipeline's memory budget
+    (``screening.memory_budget``, Table XIII) reports alongside the B/C
+    working set.
+    """
+    return n_walkers * bytes_per * (n_up * n_up + n_dn * n_dn + 4)

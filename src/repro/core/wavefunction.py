@@ -46,6 +46,19 @@ class WavefunctionConfig:
     #                                slater_state recompute every this many
     #                                sweeps; Newton–Schulz corrector between
     #                                refreshes bounds fp32 drift (DESIGN §6)
+    screening: object = None       # screening.Screening or None.  When set
+    #                                (and not exhaustive), the MO tensor is
+    #                                built through the cell-list packed-CSR
+    #                                pipeline: per-electron candidate AO
+    #                                lists with a static budget, screened
+    #                                AO evaluation, and (when the structure
+    #                                carries MO reach radii) doubly
+    #                                screened A-panel products — the
+    #                                paper's linear-scaling path (DESIGN.md
+    #                                §11).  ``exhaustive`` structures
+    #                                (cutoff = infinity) route back here
+    #                                bitwise.  Built ONCE at setup by
+    #                                ``screening.build_screening``.
     ci: object = None              # multidet.MultiDetWavefunction or None
     #                                (single determinant).  When set, the
     #                                Slater tail of every evaluation runs
@@ -92,6 +105,45 @@ class PsiState(NamedTuple):
     ao_count: jnp.ndarray    # (n_e,) active AOs per electron (sparsity stats)
 
 
+def _screening_active(cfg: WavefunctionConfig) -> bool:
+    """True when the cell-list screened pipeline should be used.
+
+    Exhaustive structures (cutoff = infinity) fall back to the unscreened
+    branches so the feature flag at infinite cutoff is bitwise inert.
+    """
+    return cfg.screening is not None and not cfg.screening.exhaustive
+
+
+def _mo_tensor_screened(cfg: WavefunctionConfig,
+                        params: WavefunctionParams, r_elec: jnp.ndarray,
+                        chunk: int = 0):
+    """Cell-list screened MO tensor: O(N * budget) instead of O(N * n_ao).
+
+    The linear-scaling pipeline (DESIGN.md §11): per-electron candidate AO
+    lists from the precomputed cell structure, screened AO evaluation at
+    only those pairs, then either the doubly screened product (active MOs
+    x active AOs, when the structure carries MO reach radii), the packed
+    sparse product, or the ``screened_mo`` Pallas kernel.
+    """
+    from . import screening as scr_mod
+    scr = cfg.screening
+    idx, active, count = scr_mod.active_ao_lists(scr, r_elec)
+    Bp = aos.eval_ao_block_screened(cfg.basis, params.coords, r_elec, idx,
+                                    active)
+    if cfg.method == 'kernel':
+        from repro.kernels.screened_mo.ops import screened_mo_products
+        to, tk, te = cfg.kernel_tiles
+        C = screened_mo_products(params.mo, Bp, idx, active, tile_o=to,
+                                 tile_k=tk, tile_e=te)
+    elif scr.mo_cells is not None:
+        mo_idx, mo_valid = scr_mod.active_mo_lists(scr, r_elec)
+        C = mos.mo_products_screened(params.mo, Bp, idx, mo_idx, mo_valid,
+                                     chunk=chunk)
+    else:
+        C = mos.mo_products_sparse(params.mo, Bp, idx, chunk=chunk)
+    return C, count
+
+
 def _mo_tensor(cfg: WavefunctionConfig, params: WavefunctionParams,
                r_elec: jnp.ndarray):
     """Compute C: (n_rows, N, 5) by the selected method + sparsity stats.
@@ -101,6 +153,8 @@ def _mo_tensor(cfg: WavefunctionConfig, params: WavefunctionParams,
     independent columns.  The walker-shaped fast path used by
     ``psi_state_batched`` is ``_mo_tensor_ensemble``.
     """
+    if _screening_active(cfg):
+        return _mo_tensor_screened(cfg, params, r_elec)
     B, atom_active = aos.eval_ao_block(cfg.basis, params.coords, r_elec)
     ao_mask = atom_active[:, jnp.asarray(cfg.basis.ao_atom)]
     count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)
@@ -136,6 +190,13 @@ def _mo_tensor_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
         axis can fill far wider tiles than one walker's n_e ever could.
     """
     W, n_e, _ = R.shape
+    if _screening_active(cfg):
+        n_rows = params.mo.shape[0]
+        C, count = _mo_tensor_screened(
+            cfg, params, R.reshape(W * n_e, 3),
+            chunk=mos.default_chunk(W * n_e, ensemble=True))
+        return (jnp.moveaxis(C.reshape(n_rows, W, n_e, 5), 1, 0),
+                count.reshape(W, n_e))
     Bw, atom_active = aos.eval_ao_block(cfg.basis, params.coords, R)
     ao_mask = atom_active[..., jnp.asarray(cfg.basis.ao_atom)]  # (W, n_e, ao)
     count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)         # (W, n_e)

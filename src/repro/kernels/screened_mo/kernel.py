@@ -1,0 +1,108 @@
+"""Screened-gather MO product Pallas kernel (paper §II-§III on the MXU).
+
+Where ``kernels.sparse_mo`` exploits sparsity at (tile_k x tile_e) *tile*
+granularity over the dense B, this kernel consumes the packed-CSR output of
+the cell-list screening pipeline directly: per electron a static-budget row
+of candidate AO ids (``idx``) and packed values (``Bp``), so the kernel
+only ever touches active (electron, AO) pairs — the memory-minimal layout
+of the paper's idea ii.).
+
+Per grid step the kernel holds a resident (tile_o, n_ao) panel of A (A
+stays dense — the paper's key choice), gathers the candidate columns of an
+electron tile's k-chunk, and accumulates the five right-hand sides in one
+batched contraction:
+
+    C[o_tile, e] += A[o_tile, idx[e, kc]] @ Bp[e, kc]      for all e in tile
+
+A scalar-prefetched per-(electron-tile, k-chunk) activity mask skips chunks
+whose candidates are all inactive (``pl.when``), which is where ragged
+active counts win back time.  Grid: (e_tiles, o_tiles, k_chunks) with k
+innermost so the C tile stays resident across the accumulation; e/o are
+``parallel``, k ``arbitrary`` on real TPU.  ``interpret=True`` (the CI
+default) runs the Python backend on CPU; the in-kernel gather lowers to
+Mosaic's dynamic-gather path on real TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(chunk_any_ref, a_ref, idx_ref, b_ref, c_ref):
+    e = pl.program_id(0)
+    kc = pl.program_id(2)
+
+    @pl.when(kc == 0)
+    def _zero():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    @pl.when(chunk_any_ref[e, kc] > 0)
+    def _acc():
+        a = a_ref[...]                                 # (tile_o, n_ao)
+        ix = idx_ref[...]                              # (tile_e, tile_k)
+        te, tk = ix.shape
+        b = b_ref[...].reshape(te, tk, 5)
+        ag = jnp.take(a, ix.reshape(-1), axis=1)
+        ag = ag.reshape(a.shape[0], te, tk)            # (tile_o, te, tk)
+        # batch over electrons, contract the candidate axis, 5 rhs at once
+        c = jax.lax.dot_general(
+            ag, b, dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)        # (te, tile_o, 5)
+        c_ref[...] += jnp.transpose(c, (1, 0, 2)).reshape(a.shape[0],
+                                                          te * 5)
+
+
+@functools.partial(
+    jax.jit, static_argnames=('tile_o', 'tile_k', 'tile_e', 'interpret'))
+def screened_mo_matmul(A: jnp.ndarray, B2d: jnp.ndarray,
+                       idx: jnp.ndarray, chunk_any: jnp.ndarray,
+                       *, tile_o: int = 128, tile_k: int = 128,
+                       tile_e: int = 8, interpret: bool = True):
+    """Packed-CSR screened product C2d = scatter(A[:, idx] @ Bp).
+
+    Args:
+      A: (n_orb, n_ao) f32, n_orb padded to tile_o (n_ao axis resident).
+      B2d: (n_e, K * 5) f32 packed values, electron-major, padded to
+        (tile_e, tile_k * 5) multiples; zeros at inactive/padding slots.
+      idx: (n_e, K) int32 candidate ids, padded likewise (in-range).
+      chunk_any: (e_tiles, k_chunks) int32 — nonzero where the chunk has
+        any active candidate (scalar-prefetched skip list).
+      interpret: Python backend (CPU validation) vs real TPU lowering.
+
+    Returns C2d: (n_orb, n_e * 5) f32.
+    """
+    n_orb, n_ao = A.shape
+    n_e, k5 = B2d.shape
+    assert n_orb % tile_o == 0 and n_e % tile_e == 0
+    assert k5 == idx.shape[1] * 5 and idx.shape[1] % tile_k == 0
+    e_tiles = n_e // tile_e
+    o_tiles = n_orb // tile_o
+    k_chunks = idx.shape[1] // tile_k
+    assert chunk_any.shape == (e_tiles, k_chunks)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(e_tiles, o_tiles, k_chunks),
+        in_specs=[
+            pl.BlockSpec((tile_o, n_ao), lambda e, o, k, ca: (o, 0)),
+            pl.BlockSpec((tile_e, tile_k), lambda e, o, k, ca: (e, k)),
+            pl.BlockSpec((tile_e, tile_k * 5), lambda e, o, k, ca: (e, k)),
+        ],
+        out_specs=pl.BlockSpec((tile_o, tile_e * 5),
+                               lambda e, o, k, ca: (o, e)),
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs['compiler_params'] = pltpu.TPUCompilerParams(
+            dimension_semantics=('parallel', 'parallel', 'arbitrary'))
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_orb, n_e * 5), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(chunk_any, A, idx, B2d)

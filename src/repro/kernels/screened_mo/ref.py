@@ -1,0 +1,27 @@
+"""jnp reference oracle for the screened-gather MO product kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def screened_mo_ref(A: jnp.ndarray, Bp: jnp.ndarray, idx: jnp.ndarray,
+                    active: jnp.ndarray) -> jnp.ndarray:
+    """Gathered dense oracle for ``ops.screened_mo_products``.
+
+    Materializes the per-electron gathered A panels in one shot — fine for
+    test sizes, O(n_orb * n_e * K) memory at scale (production paths are
+    the chunked ``mos.mo_products_sparse`` / ``mo_products_screened`` and
+    the Pallas kernel).
+
+    Args:
+      A: (n_orb, n_ao) MO coefficients.
+      Bp: (n_e, K, 5) packed candidate-AO values.
+      idx: (n_e, K) candidate AO ids.
+      active: (n_e, K) bool — inactive slots contribute nothing.
+
+    Returns C: (n_orb, n_e, 5).
+    """
+    Ag = A[:, idx]                                        # (n_orb, n_e, K)
+    Bz = jnp.where(active[..., None], Bp, 0.0)
+    return jnp.einsum('oek,ekf->oef', Ag, Bz,
+                      preferred_element_type=jnp.float32)

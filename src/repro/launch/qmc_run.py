@@ -65,6 +65,12 @@ def parse_spec(argv=None) -> RunSpec:
     ap.add_argument('--target-error', type=float, default=0.0)
     ap.add_argument('--wall-clock', type=float, default=0.0)
     ap.add_argument('--tau', type=float, default=0.0)
+    ap.add_argument('--screen-eps', type=float, default=-1.0,
+                    help='AO cutoff tolerance for cell-list distance '
+                         'screening (DESIGN.md §11).  Negative (default): '
+                         'screening off; 0: drop only exact zeros (bitwise-'
+                         'identical estimator, linear-scaling cost); > 0: '
+                         'tolerance cutoffs (enters the run key)')
     ap.add_argument('--db', default=':memory:')
     ap.add_argument('--e-trial', type=float, default=None)
     ap.add_argument('--seed', type=int, default=0)
@@ -104,7 +110,7 @@ def parse_spec(argv=None) -> RunSpec:
     host, port = parse_address(args.listen)
     return RunSpec(
         system=args.system, method=args.method, n_det=args.n_det,
-        tau=args.tau,
+        tau=args.tau, screen_eps=args.screen_eps,
         e_trial=args.e_trial, n_walkers=args.walkers, steps=args.steps,
         shards=args.shards, backend=args.backend, n_workers=args.workers,
         grid=SimGridConfig(latency=args.sim_latency, drop_rate=args.sim_drop,

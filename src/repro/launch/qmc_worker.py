@@ -45,9 +45,11 @@ def sampler_from_payload(welcome: dict):
     from repro.runtime.samplers import BlockSampler
     from repro.systems import build_system
 
+    eps = float(spec.get('screen_eps', -1.0))
     cfg, params = build_system(spec['system'],
                                n_det=int(spec.get('n_det', 1)),
-                               ci_seed=int(spec.get('ci_seed', 0)))
+                               ci_seed=int(spec.get('ci_seed', 0)),
+                               screen_eps=(eps if eps >= 0 else None))
     prop = make_propagator(spec['method'], cfg, tau=float(spec['tau']),
                            e_trial=spec.get('e_trial'),
                            equil_steps=int(spec.get('equil_steps', 100)))

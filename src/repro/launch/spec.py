@@ -60,6 +60,11 @@ class RunSpec:
     tau: float = 0.0                 # 0 -> method default
     e_trial: float | None = None     # DMC reference energy (None: guess)
     equil_steps: int = 100           # DMC cold-start VMC equilibration
+    screen_eps: float = -1.0         # AO cutoff tolerance for the cell-list
+    #                                  screening pipeline (core.screening).
+    #                                  Negative: screening off (dense path,
+    #                                  the historical behavior).  >= 0:
+    #                                  critical data — enters the run key.
 
     # ensemble / shard layout
     n_walkers: int = 32              # walkers per worker (paper: 10-100)
@@ -170,8 +175,9 @@ def build_run(spec: RunSpec) -> QMCRun:
     """
     from repro.core.driver import make_propagator
 
+    screen_eps = spec.screen_eps if spec.screen_eps >= 0 else None
     cfg, params = build_system(spec.system, n_det=spec.n_det,
-                               ci_seed=spec.seed)
+                               ci_seed=spec.seed, screen_eps=screen_eps)
     tau = spec.resolved_tau()
     prop = make_propagator(spec.method, cfg, tau=tau, e_trial=spec.e_trial,
                            equil_steps=spec.equil_steps)
@@ -195,10 +201,18 @@ def build_run(spec: RunSpec) -> QMCRun:
                 np.asarray(cfg.ci.holes_up), np.asarray(cfg.ci.parts_up),
                 np.asarray(cfg.ci.holes_dn), np.asarray(cfg.ci.parts_dn)],
                 axis=1))
+    # screening at eps > 0 perturbs the estimator (AO values below the
+    # cutoff are dropped), so the tolerance is critical data.  Off /
+    # exhaustive (eps < 0) and exact (eps == 0) runs keep the unscreened
+    # key: they produce bitwise-identical estimators (tests/test_screening
+    # .py), and adding a key entry would orphan every pre-screening row.
+    screen_key = {}
+    if screen_eps is not None and screen_eps > 0:
+        screen_key = dict(screen_eps=screen_eps)
     run_key = critical_data_key(
         system=spec.system, method=spec.method, tau=tau,
         mo=np.asarray(params.mo), coords=np.asarray(params.coords),
-        **ci_key)
+        **ci_key, **screen_key)
     db = ResultDatabase(spec.db)
     control = RunControl(max_blocks=spec.max_blocks,
                          target_error=spec.target_error,
@@ -216,7 +230,7 @@ def build_run(spec: RunSpec) -> QMCRun:
             system=spec.system, method=spec.method, n_det=spec.n_det,
             ci_seed=spec.seed, tau=tau, e_trial=spec.e_trial,
             equil_steps=spec.equil_steps, n_walkers=spec.n_walkers,
-            steps=spec.steps))
+            steps=spec.steps, screen_eps=spec.screen_eps))
     mgr = QMCManager(sampler, run_key, control, db=db, seed=spec.seed,
                      backend=backend, n_kept=spec.n_kept)
     return QMCRun(spec=spec, run_key=run_key, cfg=cfg, params=params,

@@ -15,11 +15,16 @@ from __future__ import annotations
 MOLECULES = ('h', 'h2', 'heh+', 'water')
 
 
-def build_system(name: str, n_det: int = 1, ci_seed: int = 0):
+def build_system(name: str, n_det: int = 1, ci_seed: int = 0,
+                 screen_eps: float | None = None):
     """Resolve a system name to ``(WavefunctionConfig, params)``.
 
     ``n_det``: CI expansion size (1 = single determinant); ``ci_seed``
     seeds the synthetic excitation draw (``systems.bench.synthetic_ci``).
+    ``screen_eps`` (None = off) attaches the cell-list AO screening
+    structure at that tolerance (``core.screening``) to either kind of
+    system; 0.0 drops only exact zeros, negative values build the
+    exhaustive (no-op) structure.
     """
     if name in MOLECULES:
         from repro.systems import molecule as mol
@@ -27,16 +32,18 @@ def build_system(name: str, n_det: int = 1, ci_seed: int = 0):
               'water': mol.water}[name]
         m, shells = fn()
         if n_det <= 1:
-            return mol.build_wavefunction(m, shells)
+            return mol.build_wavefunction(m, shells, screen_eps=screen_eps)
         from repro.core.basis import build_basis
         from repro.systems.bench import synthetic_ci
         n_ao = build_basis(shells, m.coords.shape[0]).n_ao
         n_orb = min(n_ao, max(m.n_up, m.n_dn) + 6)
         ci = synthetic_ci(m.n_up, m.n_dn, n_orb, n_det, seed=ci_seed)
-        return mol.build_wavefunction(m, shells, n_orb=n_orb, ci=ci)
+        return mol.build_wavefunction(m, shells, n_orb=n_orb, ci=ci,
+                                      screen_eps=screen_eps)
     from repro.systems.bench import build_bench_wavefunction, paper_system
     return build_bench_wavefunction(paper_system(name), method='sparse',
-                                    n_det=n_det, ci_seed=ci_seed)
+                                    n_det=n_det, ci_seed=ci_seed,
+                                    screen_eps=screen_eps)
 
 
 __all__ = ['MOLECULES', 'build_system']

@@ -248,6 +248,24 @@ def paper_system(name: str) -> BenchSystem:
     return make_bench_system(name, **PAPER_SYSTEMS[name])
 
 
+def synthetic_chain(n_elec: int, basis_kind: str = '631gs',
+                    loc_length: float = 3.5, seed: int = 0) -> BenchSystem:
+    """Growing synthetic peptide chain for the scaling-curve benchmark.
+
+    An extended beta-strand (paper Fig. 1) of ``n_elec // 30`` residues —
+    the geometry family behind Table XIII (``benchmarks/tables.py::
+    table_scaling``), spanning the paper's 158 -> 1731 electron range with
+    one generator so fitted scaling exponents compare like for like.  MOs
+    use a tighter localization length than the compact defaults: on an
+    extended chain MO support is genuinely local (the regime where orbital
+    cutoffs work, per the Alfè–Gillan linear-scaling argument), giving the
+    doubly screened pipeline its active-MO lists.
+    """
+    return make_bench_system(f'chain-{n_elec}', n_elec,
+                             basis_kind=basis_kind, geometry='strand',
+                             loc_length=loc_length, seed=seed)
+
+
 def synthetic_ci(n_up: int, n_dn: int, n_orb: int, n_det: int,
                  seed: int = 0, max_exc: int = 2):
     """Synthetic CI expansion: reference + random singles/doubles.
@@ -329,12 +347,16 @@ def extend_mos_virtual(sys: BenchSystem, n_virt: int,
 
 def build_bench_wavefunction(sys: BenchSystem, method: str = 'sparse',
                              k_max: int = 512, n_det: int = 1,
-                             ci_seed: int = 0):
+                             ci_seed: int = 0,
+                             screen_eps: float | None = None):
     """(config, params) for a BenchSystem — MOs are the generated A matrix.
 
     ``n_det > 1`` attaches a ``synthetic_ci`` expansion (and the virtual
     MO rows it excites into) to the config — the Table X / ``--n-det``
-    multideterminant path.
+    multideterminant path.  ``screen_eps`` (None = off) attaches a one-time
+    cell-list ``Screening`` structure built at that AO tolerance (0.0 =
+    exact zero structure only, < 0 = exhaustive/no-cutoff routing) — the
+    linear-scaling pipeline of DESIGN.md §11.
     """
     import jax.numpy as jnp
     from repro.core.jastrow import default_params
@@ -346,9 +368,15 @@ def build_bench_wavefunction(sys: BenchSystem, method: str = 'sparse',
         mos = extend_mos_virtual(sys, n_virt)
         ci = synthetic_ci(sys.mol.n_up, sys.mol.n_dn, mos.shape[0],
                           n_det, seed=ci_seed)
+    screening = None
+    if screen_eps is not None:
+        from repro.core.screening import build_screening
+        screening = build_screening(sys.basis, sys.mol.coords, mos,
+                                    eps=screen_eps)
     cfg = WavefunctionConfig(
         basis=sys.basis, n_up=sys.mol.n_up, n_dn=sys.mol.n_dn,
-        k_max=k_max, shared_orbitals=True, method=method, ci=ci)
+        k_max=k_max, shared_orbitals=True, method=method, ci=ci,
+        screening=screening)
     params = WavefunctionParams(
         coords=jnp.asarray(sys.mol.coords, jnp.float32),
         charges=jnp.asarray(sys.mol.charges, jnp.float32),

@@ -82,13 +82,17 @@ def build_wavefunction(mol: Molecule, shells, k_max: int = 0,
                        method: str = 'dense', jastrow: JastrowParams = None,
                        mos: np.ndarray = None,
                        ns_steps: int = 1, n_orb: int = 0,
-                       ci=None):
+                       ci=None, screen_eps: float | None = None):
     """Assemble (config, params). MOs default to core-Hamiltonian guess.
 
     ``n_orb`` requests that many MO rows (0: just the occupied set) —
     multideterminant expansions need virtual orbitals too; ``ci`` is an
     optional ``multidet.MultiDetWavefunction`` stored on the config (its
-    ``n_orb`` must match the MO rows).
+    ``n_orb`` must match the MO rows).  ``screen_eps`` (None = off)
+    attaches a one-time cell-list ``Screening`` structure at that AO
+    tolerance (DESIGN.md §11); small molecules gain nothing but share the
+    same code path as the peptide systems, which is what the exactness
+    tests exercise.
     """
     bas = build_basis(shells, mol.coords.shape[0])
     n_orb = max(n_orb, mol.n_up, mol.n_dn)
@@ -100,9 +104,14 @@ def build_wavefunction(mol: Molecule, shells, k_max: int = 0,
     if ci is not None and ci.n_orb != np.asarray(mos).shape[0]:
         raise ValueError(f'CI expansion indexes {ci.n_orb} orbitals but '
                          f'params.mo has {np.asarray(mos).shape[0]} rows')
+    screening = None
+    if screen_eps is not None:
+        from repro.core.screening import build_screening
+        screening = build_screening(bas, mol.coords, mos, eps=screen_eps)
     cfg = WavefunctionConfig(
         basis=bas, n_up=mol.n_up, n_dn=mol.n_dn, k_max=k_max,
-        shared_orbitals=True, method=method, ns_steps=ns_steps, ci=ci)
+        shared_orbitals=True, method=method, ns_steps=ns_steps, ci=ci,
+        screening=screening)
     params = WavefunctionParams(
         coords=jnp.asarray(mol.coords, jnp.float32),
         charges=jnp.asarray(mol.charges, jnp.float32),

@@ -1,0 +1,84 @@
+"""tools/bench_gate.py: ratio-only perf gate logic against synthetic docs."""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / 'tools'))
+
+import bench_gate
+
+
+def _sem_row(n_elec, speedup):
+    return dict(table='VIII', system='micro-peptide', n_elec=n_elec,
+                walkers=8, sem_sweep_s=0.01, speedup=speedup)
+
+
+def _fit_row(method, exponent):
+    return dict(table='XIII', system='chain-fit', method=method,
+                n_min=158, n_max=872, exponent=exponent)
+
+
+def _statuses(verdicts):
+    return [s for s, _ in verdicts]
+
+
+def test_speedup_min_mode():
+    base = [_sem_row(30, 100.0), _sem_row(60, 50.0)]
+    ok = bench_gate.compare('VIII', [_sem_row(30, 80.0), _sem_row(60, 49.0)],
+                            base, slack=1.3)
+    assert _statuses(ok) == ['PASS', 'PASS']
+    bad = bench_gate.compare('VIII', [_sem_row(30, 60.0)], base, slack=1.3)
+    assert _statuses(bad) == ['FAIL']
+
+
+def test_exponent_max_mode_and_hard_cap():
+    base = [_fit_row('screened', 1.5), _fit_row('dense', 2.6)]
+    ok = bench_gate.compare('XIII',
+                            [_fit_row('screened', 1.7), _fit_row('dense', 2.9)],
+                            base, slack=1.3)
+    assert _statuses(ok) == ['PASS', 'PASS']
+    drift = bench_gate.compare('XIII', [_fit_row('screened', 1.96)],
+                               base, slack=1.3)
+    assert _statuses(drift) == ['FAIL']          # 1.96 > 1.5 * 1.3
+    # hard sub-quadratic cap fires even with a huge slack
+    cap = bench_gate.compare('XIII', [_fit_row('screened', 2.1)],
+                             base, slack=10.0)
+    assert _statuses(cap) == ['FAIL']
+    assert 'hard cap' in cap[0][1]
+
+
+def test_missing_rows_skip_not_fail():
+    base = [_sem_row(30, 100.0)]
+    # fresh row with no baseline counterpart (e.g. a new size) -> SKIP
+    verdicts = bench_gate.compare('VIII', [_sem_row(240, 5.0)], base, 1.3)
+    assert _statuses(verdicts) == ['SKIP']
+    # no fresh rows at all -> one SKIP note, no failure
+    verdicts = bench_gate.compare('VIII', [], base, 1.3)
+    assert _statuses(verdicts) == ['SKIP']
+    # baseline-only sizes are ignored when fresh covers a subset
+    verdicts = bench_gate.compare(
+        'VIII', [_sem_row(30, 99.0)], base + [_sem_row(60, 50.0)], 1.3)
+    assert _statuses(verdicts) == ['PASS']
+
+
+def test_main_green_against_committed_artifacts(tmp_path):
+    """--fresh mode: a fresh doc equal to the committed baselines gates
+    green end to end (what the CI step runs, minus the benchmark)."""
+    rows = []
+    for name in ('BENCH_sem.json', 'BENCH_scaling.json'):
+        p = ROOT / name
+        if p.exists():
+            rows.extend(json.loads(p.read_text())['rows'])
+    if not rows:
+        import pytest
+        pytest.skip('no committed benchmark artifacts')
+    doc = tmp_path / 'fresh.json'
+    doc.write_text(json.dumps({'rows': rows}))
+    assert bench_gate.main(['--fresh', str(doc)]) == 0
+
+
+def test_main_rejects_unknown_table(capsys):
+    import pytest
+    with pytest.raises(SystemExit):
+        bench_gate.main(['--run', 'nope'])

@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Perf-regression gate: fresh benchmark rows vs committed BENCH_*.json.
+
+Absolute wall-times are machine-bound — a laptop baseline means nothing on
+a CI runner — so the gate only checks *machine-relative* metrics:
+
+* ``speedup``-style ratios (maintained-inverse vs recompute, shared-inverse
+  vs slogdet, ensemble-flattened vs vmap): both sides of the ratio ran on
+  the same box in the same process, so the ratio travels across machines.
+  Mode ``min``: a fresh ratio may not drop below ``baseline / slack``.
+* fitted scaling ``exponent``s (Table XIII): log-log slopes are
+  dimensionless.  Mode ``max``: a fresh exponent may not exceed
+  ``baseline * slack`` — and the screened pipeline must stay sub-quadratic
+  in absolute terms (``HARD_MAX``), whatever the baseline says.
+
+Rows are matched on per-table identity columns; baseline rows with no
+fresh counterpart (e.g. ``--full``-only sizes under a quick fresh run) are
+ignored, missing baselines or tables SKIP rather than fail, so the gate is
+green on a partial checkout and tightens as artifacts accumulate.
+
+    PYTHONPATH=src python tools/bench_gate.py --run VIII,XIII
+    PYTHONPATH=src python tools/bench_gate.py --fresh out.json   # pre-run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# table -> [(metric, mode, identity columns)]; mode 'min' guards ratios
+# that must stay high, 'max' guards exponents that must stay low
+GATES = {
+    'VI': [('speedup', 'min', ('system', 'n_elec', 'walkers'))],
+    'VIII': [('speedup', 'min', ('system', 'n_elec', 'walkers'))],
+    'X': [('speedup', 'min', ('system', 'n_elec', 'n_det', 'walkers'))],
+    'XIII': [('exponent', 'max', ('system', 'method'))],
+}
+BASELINES = {
+    'VI': 'BENCH_ensemble.json',
+    'VIII': 'BENCH_sem.json',
+    'X': 'BENCH_multidet.json',
+    'XIII': 'BENCH_scaling.json',
+}
+# absolute ceilings enforced on fresh rows regardless of the baseline:
+# the screened pipeline's whole point is sub-quadratic scaling
+HARD_MAX = {('XIII', 'exponent'): {('chain-fit', 'screened'): 2.0}}
+
+
+def _index(rows, table, keys):
+    out = {}
+    for row in rows:
+        if str(row.get('table')) != table:
+            continue
+        out[tuple(row.get(k) for k in keys)] = row
+    return out
+
+
+def compare(table, fresh_rows, base_rows, slack):
+    """One table's verdicts: list of (status, message) pairs.
+
+    status in {'PASS', 'FAIL', 'SKIP'}; baseline-only rows are ignored
+    (quick fresh runs cover a subset of ``--full`` baselines).
+    """
+    verdicts = []
+    for metric, mode, keys in GATES[table]:
+        base = {k: v for k, v in _index(base_rows, table, keys).items()
+                if metric in v}
+        fresh = {k: v for k, v in _index(fresh_rows, table, keys).items()
+                 if metric in v}
+        hard = HARD_MAX.get((table, metric), {})
+        if not base:
+            verdicts.append(('SKIP', f'{table}/{metric}: no baseline rows'))
+            continue
+        if not fresh:
+            verdicts.append(('SKIP', f'{table}/{metric}: no fresh rows'))
+            continue
+        for key in sorted(fresh, key=str):
+            f = float(fresh[key][metric])
+            tag = f'{table}/{metric}@{key}'
+            if key in hard and f > hard[key]:
+                verdicts.append(
+                    ('FAIL', f'{tag}: {f} exceeds hard cap {hard[key]}'))
+                continue
+            if key not in base:
+                verdicts.append(('SKIP', f'{tag}: no baseline row'))
+                continue
+            b = float(base[key][metric])
+            if mode == 'min':
+                ok, bound = f >= b / slack, round(b / slack, 3)
+                rel = f'{f} >= {bound}'
+            else:
+                ok, bound = f <= b * slack, round(b * slack, 3)
+                rel = f'{f} <= {bound}'
+            verdicts.append(('PASS' if ok else 'FAIL',
+                             f'{tag}: {rel} (baseline {b})'))
+    return verdicts
+
+
+def run_fresh(tables):
+    """Produce fresh quick-tier rows for the requested tables in-process."""
+    sys.path.insert(0, str(ROOT))
+    sys.path.insert(0, str(ROOT / 'src'))
+    from benchmarks import tables as T
+    fns = {'VI': T.table_ensemble, 'VIII': T.table_sem,
+           'X': T.table_multidet, 'XIII': T.table_scaling}
+    rows = []
+    for tab in tables:
+        rows.extend(fns[tab](quick=True))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--run', default='XIII',
+                    help='comma-separated tables to benchmark fresh and '
+                         f'gate (valid: {",".join(GATES)})')
+    ap.add_argument('--fresh', metavar='OUT.json', default=None,
+                    help='gate a pre-generated benchmarks/run.py --json '
+                         'file instead of running benchmarks here')
+    ap.add_argument('--slack', type=float, default=1.3,
+                    help='allowed relative drift vs the baseline (1.3: '
+                         'ratios may lose 30%%, exponents gain 30%%)')
+    args = ap.parse_args(argv)
+
+    if args.fresh:
+        fresh_rows = json.loads(Path(args.fresh).read_text())['rows']
+        tables = sorted({str(r.get('table')) for r in fresh_rows} & set(GATES))
+    else:
+        tables = [t.strip().upper() for t in args.run.split(',') if t.strip()]
+        bad = [t for t in tables if t not in GATES]
+        if bad:
+            ap.error(f'no gate defined for table(s) {",".join(bad)} '
+                     f'(valid: {",".join(GATES)})')
+        fresh_rows = run_fresh(tables)
+
+    failures = 0
+    for tab in tables:
+        path = ROOT / BASELINES[tab]
+        if not path.exists():
+            print(f'SKIP {tab}: no committed {BASELINES[tab]}')
+            continue
+        base_rows = json.loads(path.read_text())['rows']
+        for status, msg in compare(tab, fresh_rows, base_rows, args.slack):
+            print(f'{status} {msg}')
+            failures += status == 'FAIL'
+    print(f'bench_gate: {"FAIL" if failures else "OK"} '
+          f'({failures} failing checks, slack {args.slack}x)')
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())
