@@ -23,8 +23,11 @@ n_det = 1/100 plus the per-sub-block moment-accumulation overhead vs
 plain VMC); Table XIII is the distance-screening scaling law (per-SEM-sweep
 wavefunction-construction cost, screened vs dense, over the growing
 ``synthetic_chain`` systems, with fitted log-log exponents — the rows
-``tools/bench_gate.py`` gates against the committed BENCH_scaling.json).
-TPU-side roofline numbers live in experiments/roofline +
+``tools/bench_gate.py`` gates against the committed BENCH_scaling.json);
+Table XIV is the multi-tenant service-throughput table (N concurrent
+``QMCService`` runs over one fixed worker pool vs the whole pool behind a
+single run — aggregate blocks/s, ``vs_single`` and the min/max ``fairness``
+ratio).  TPU-side roofline numbers live in experiments/roofline +
 EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
@@ -47,7 +50,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
     ap.add_argument('--tables',
-                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII,XIII')
+                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII,XIII,XIV')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -58,7 +61,8 @@ def main(argv=None) -> int:
            'V': T.table5, 'VI': T.table_ensemble, 'VII': T.table_driver,
            'VIII': T.table_sem, 'IX': T.table_runtime,
            'X': T.table_multidet, 'XI': T.table_grid,
-           'XII': T.table_opt, 'XIII': T.table_scaling}
+           'XII': T.table_opt, 'XIII': T.table_scaling,
+           'XIV': T.table_serve}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

@@ -772,3 +772,55 @@ def table_scaling(quick=True):
             n_min=int(n[0]), n_max=int(n[-1]),
             exponent=round(slope, 3)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Table XIV: multi-tenant service throughput (N concurrent runs vs 1)
+# ---------------------------------------------------------------------------
+def table_serve(quick=True):
+    """Throughput cost of multi-tenancy in the ``QMCService`` engine.
+
+    One fixed worker pool serves N concurrent tenant runs (the sleep-bound
+    Gaussian sampler stands in for GIL-free XLA compute, as in Table V):
+    each tenant submits the same per-run block target and the table
+    reports the *aggregate* steady-state block rate.  ``vs_single`` is
+    that rate relative to the N = 1 row — the whole pool behind one run —
+    so it measures the pure price of fair-share scheduling, lease
+    resizing, and per-run manager polling.  ``fairness`` is the
+    min/max ratio of blocks landed per tenant (1.0 = perfectly even);
+    the committed ``BENCH_serve.json`` gates both through
+    ``tools/bench_gate.py``.
+    """
+    from repro.launch.spec import RunSpec
+    from repro.serve import QMCService, gaussian_builder
+
+    pool = 4
+    blocks_per_run = 24 if quick else 60
+    tenant_counts = [1, 2, 4] if quick else [1, 2, 4, 8]
+    rows = []
+    base = None
+    for n_runs in tenant_counts:
+        svc = QMCService(total_workers=pool, builder=gaussian_builder,
+                         poll_interval=0.02)
+        try:
+            specs = [RunSpec(system=f'tenant{i}', method='vmc',
+                             n_workers=pool, n_walkers=8, steps=4,
+                             max_blocks=blocks_per_run, poll_interval=0.02,
+                             seed=i)
+                     for i in range(n_runs)]
+            t0 = time.monotonic()
+            ids = [svc.submit(s) for s in specs]
+            stats = [svc.wait(rid, 600) for rid in ids]
+            wall = time.monotonic() - t0
+        finally:
+            svc.close()
+        per_run = [s['n_blocks'] for s in stats]
+        rate = sum(per_run) / wall
+        if base is None:
+            base = rate
+        rows.append(dict(
+            table='XIV', runs=n_runs, pool=pool, blocks=sum(per_run),
+            wall_s=round(wall, 2), blocks_per_s=round(rate, 1),
+            vs_single=round(rate / base, 2),
+            fairness=round(min(per_run) / max(per_run), 3)))
+    return rows

@@ -130,6 +130,79 @@ class RunSpec:
         return method_default_tau(self.method)
 
 
+# RunSpec fields that may cross a trust boundary as plain JSON data.
+# Everything a client can set is a scalar; the two nested configs are
+# rebuilt field-by-field from their own whitelists — nothing is ever
+# unpickled or eval'd on the receive path (the packets.py discipline).
+_SCALAR_FIELDS = tuple(
+    f.name for f in dataclasses.fields(RunSpec)
+    if f.name not in ('grid', 'net'))
+
+
+def spec_to_payload(spec: RunSpec) -> dict:
+    """RunSpec -> plain-JSON payload (the wire/database representation).
+
+    The inverse of ``spec_from_payload``; stored under the run key in the
+    database's ``runs`` registry, shipped over the service protocol, and
+    embedded in grid WELCOME frames.  Pure data: scalars + two nested
+    dicts of scalars.
+    """
+    out = {f: getattr(spec, f) for f in _SCALAR_FIELDS}
+    out['grid'] = dataclasses.asdict(spec.grid)
+    out['net'] = dataclasses.asdict(spec.net)
+    # tuples are not JSON; normalize to lists for a stable round trip
+    for cfg in (out['grid'], out['net']):
+        for k, v in cfg.items():
+            if isinstance(v, tuple):
+                cfg[k] = [list(x) if isinstance(x, (tuple, list)) else x
+                          for x in v]
+    return out
+
+
+def spec_from_payload(payload: dict) -> RunSpec:
+    """Plain-JSON payload -> validated RunSpec (strict whitelist).
+
+    Unknown fields raise ``ValueError`` (a client cannot smuggle state
+    into the engine), nested configs are rebuilt from their dataclass
+    whitelists, and ``RunSpec.__post_init__`` re-validates the result —
+    the one ingest gate for every spec that arrives over the wire or is
+    reloaded from the database registry.
+    """
+    if not isinstance(payload, dict):
+        raise ValueError(f'spec payload must be a dict, got '
+                         f'{type(payload).__name__}')
+    kw = {}
+    for name, value in payload.items():
+        if name == 'grid':
+            allowed = {f.name for f in dataclasses.fields(SimGridConfig)}
+            bad = set(value) - allowed
+            if bad:
+                raise ValueError(f'unknown grid field(s) {sorted(bad)}')
+            value = dict(value)
+            for k in ('worker_failures', 'forwarder_failures'):
+                if k in value:
+                    value[k] = tuple(tuple(x) for x in value[k])
+            kw['grid'] = SimGridConfig(**value)
+        elif name == 'net':
+            allowed = {f.name for f in dataclasses.fields(GridConfig)}
+            bad = set(value) - allowed
+            if bad:
+                raise ValueError(f'unknown net field(s) {sorted(bad)}')
+            value = dict(value)
+            if 'worker_args' in value:
+                value['worker_args'] = tuple(value['worker_args'])
+            kw['net'] = GridConfig(**value)
+        elif name in _SCALAR_FIELDS:
+            if value is not None and not isinstance(value, (int, float,
+                                                            str, bool)):
+                raise ValueError(f'spec field {name!r} must be scalar, '
+                                 f'got {type(value).__name__}')
+            kw[name] = value
+        else:
+            raise ValueError(f'unknown spec field {name!r}')
+    return RunSpec(**kw)
+
+
 @dataclasses.dataclass
 class QMCRun:
     """A RunSpec compiled against a substrate: ready-to-run stack."""
@@ -164,14 +237,19 @@ class QMCRun:
         return self.manager.worker_errors()
 
 
-def build_run(spec: RunSpec) -> QMCRun:
+def build_run(spec: RunSpec, db: ResultDatabase | None = None) -> QMCRun:
     """Compile a RunSpec into a runnable manager/sampler/backend stack.
 
     The assembly that was hand-wired in ``qmc_run``: resolve the system,
     build the method's Propagator through the ``core.driver`` registry,
     wrap it in the generic ``BlockSampler`` (walker-mesh-sharded when
     ``shards > 1``), key the database by critical data, and stand up a
-    ``QMCManager`` on the requested backend.
+    ``QMCManager`` on the requested backend.  ``db`` injects a shared
+    store (the multi-tenant service passes its own durable database so
+    every concurrent run lands in one file); by default each run opens
+    ``spec.db`` itself.  Either way the run key is registered with its
+    declarative spec payload, which is what ``extend``/``fork`` later
+    rebuild the spec from.
     """
     from repro.core.driver import make_propagator
 
@@ -213,7 +291,9 @@ def build_run(spec: RunSpec) -> QMCRun:
         system=spec.system, method=spec.method, tau=tau,
         mo=np.asarray(params.mo), coords=np.asarray(params.coords),
         **ci_key, **screen_key)
-    db = ResultDatabase(spec.db)
+    if db is None:
+        db = ResultDatabase(spec.db)
+    db.register_run(run_key, spec=spec_to_payload(spec))
     control = RunControl(max_blocks=spec.max_blocks,
                          target_error=spec.target_error,
                          wall_clock_limit=spec.wall_clock_limit,

@@ -35,7 +35,8 @@ from repro.runtime.backends import (BACKENDS, ExecutorBackend,
                                     WorkerHandle, make_backend)
 from repro.runtime.blocks import (BlockAccumulator, BlockResult,
                                   combine_blocks)
-from repro.runtime.database import ResultDatabase, critical_data_key
+from repro.runtime.database import (SCHEMA_VERSION, ResultDatabase,
+                                    critical_data_key, validate_block)
 from repro.runtime.forwarder import Forwarder, build_tree
 from repro.runtime.grid import GridBackend, GridConfig, GridWorkerClient
 from repro.runtime.manager import QMCManager, RunControl
@@ -45,7 +46,7 @@ __all__ = [
     'BACKENDS', 'BlockAccumulator', 'BlockResult', 'combine_blocks',
     'ExecutorBackend', 'Forwarder', 'GridBackend', 'GridConfig',
     'GridWorkerClient', 'ProcessBackend', 'QMCManager',
-    'ResultDatabase', 'RunControl', 'SimGridBackend',
+    'ResultDatabase', 'RunControl', 'SCHEMA_VERSION', 'SimGridBackend',
     'SimGridConfig', 'ThreadBackend', 'WalkerReservoir', 'WorkerHandle',
-    'build_tree', 'critical_data_key', 'make_backend',
+    'build_tree', 'critical_data_key', 'make_backend', 'validate_block',
 ]

@@ -57,6 +57,7 @@ import traceback
 import numpy as np
 
 from repro.runtime.blocks import BlockAccumulator
+from repro.runtime.database import SCHEMA_VERSION
 from repro.runtime.packets import (ASSIGN, BLOCKS, BYE, E_TRIAL, ERROR,
                                    HEARTBEAT, HELLO, PARAMS, STOP, WALKERS,
                                    WELCOME, FrameReader, PacketError,
@@ -486,7 +487,11 @@ class GridBackend:
                        run_key=h.run_key, job=h.job,
                        subblocks=h.assigned_subblocks,
                        heartbeat_interval=self.net.heartbeat_interval,
-                       spec=self._run_payload)
+                       spec=self._run_payload,
+                       # results-store schema this run writes into: a
+                       # worker built against a newer store refuses to
+                       # feed rows an older validator would reject
+                       schema=SCHEMA_VERSION)
         with self._lock:
             params = self._current_params
         if params is not None:
@@ -728,12 +733,34 @@ class GridWorkerClient:
         hb = threading.Thread(target=_heartbeat_loop, daemon=True)
         hb.start()
         try:
-            if self.worker_id is None:            # first successful join
+            schema = int(welcome.get('schema', SCHEMA_VERSION))
+            if schema > SCHEMA_VERSION:
+                # the manager's store validates rows this worker cannot
+                # promise to satisfy — fail loudly (ERROR frame + raise)
+                # instead of feeding blocks a newer validator may reject
+                raise RuntimeError(
+                    f'manager store schema v{schema} is newer than this '
+                    f'worker (v{SCHEMA_VERSION}); upgrade the worker host')
+            if self.worker_id is None or welcome['job'] != self.job:
+                # first successful join — or a *new run* on the managing
+                # end (a long-lived grid host re-attached to a service
+                # that started another job): adopt the new identity and
+                # reset per-run progress.  A plain reconnect inside one
+                # job keeps identity, sampler state, and counters.
+                new_run = self.worker_id is not None
                 self.worker_id = int(welcome['worker_id'])
                 self.run_key = welcome['run_key']
                 self.job = welcome['job']
                 self.subblocks = int(welcome['subblocks'])
-                if self.sampler is None:
+                if new_run:
+                    self.blocks_done = 0
+                    self.subblocks_done = 0
+                    self._step = 0
+                    self._last_packet = None       # belongs to the old job
+                    self._e_trial = None
+                    self._params_update = None
+                if self.sampler is None or (new_run
+                                            and self.sampler_factory):
                     self.sampler = self.sampler_factory(welcome)
                 init_walkers = welcome.get('init_walkers')
                 if init_walkers is not None:

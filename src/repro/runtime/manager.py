@@ -82,6 +82,7 @@ class QMCManager:
         # write the same (worker, block) counters without key collisions,
         # while true replays (merging the same DB twice) still dedupe.
         self.job_id = uuid.uuid4().hex[:12]
+        self._stop_requested = False
 
     # -- elastic resources ----------------------------------------------------
     def add_worker(self, init_walkers: np.ndarray | None = None
@@ -131,8 +132,24 @@ class QMCManager:
         workers report ready."""
         self._t0 = time.monotonic()
 
+    @property
+    def n_running(self) -> int:
+        """Workers currently live (the lease-resizing observable)."""
+        return sum(1 for w in self.workers if w.running)
+
+    def request_stop(self) -> None:
+        """Ask the run to stop at the next poll (cancel from outside).
+
+        Thread-safe by construction (a single bool flip); ``should_stop``
+        honors it on every substrate, so a service can cancel a run it is
+        driving without reaching into worker handles.
+        """
+        self._stop_requested = True
+
     def should_stop(self, avg: RunningAverage) -> bool:
         c = self.control
+        if self._stop_requested:
+            return True
         if c.wall_clock_limit and (time.monotonic() - self._t0
                                    > c.wall_clock_limit):
             return True

@@ -1,0 +1,22 @@
+"""Multi-tenant QMC run service (paper §V as a long-lived engine).
+
+The database-centric deployment's service form: ``QMCService`` (engine:
+job queue, fair-share worker leases, live stats, extend/fork by run
+key), ``QMCServiceServer`` (TCP framed-JSON front end), and
+``ServiceClient`` (the ``qmc_client`` CLI's library).  Launchers live in
+``repro.launch.qmc_serve`` / ``repro.launch.qmc_client``.
+"""
+from repro.serve.client import ServiceClient, wait_for_server
+from repro.serve.engine import (CANCELLED, DONE, FAILED, FINAL_STATES,
+                                QUEUED, RUNNING, QMCService,
+                                default_builder, gaussian_builder)
+from repro.serve.protocol import ServiceError
+from repro.serve.scheduler import fair_shares
+from repro.serve.server import QMCServiceServer
+
+__all__ = [
+    'CANCELLED', 'DONE', 'FAILED', 'FINAL_STATES', 'QUEUED', 'RUNNING',
+    'QMCService', 'QMCServiceServer', 'ServiceClient', 'ServiceError',
+    'default_builder', 'fair_shares', 'gaussian_builder',
+    'wait_for_server',
+]

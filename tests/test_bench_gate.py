@@ -62,11 +62,49 @@ def test_missing_rows_skip_not_fail():
     assert _statuses(verdicts) == ['PASS']
 
 
+def _serve_row(runs, vs_single, fairness):
+    return dict(table='XIV', runs=runs, pool=4, blocks=runs * 30,
+                blocks_per_s=100.0, vs_single=vs_single, fairness=fairness)
+
+
+def test_serve_table_gates_throughput_and_fairness():
+    base = [_serve_row(1, 1.0, 1.0), _serve_row(4, 0.9, 0.8)]
+    ok = bench_gate.compare('XIV', [_serve_row(4, 0.85, 0.75)], base, 1.3)
+    assert _statuses(ok) == ['PASS', 'PASS']
+    # a scheduling regression that starves one tenant fails the gate
+    bad = bench_gate.compare('XIV', [_serve_row(4, 0.9, 0.3)], base, 1.3)
+    assert _statuses(bad) == ['PASS', 'FAIL']
+
+
+def test_grid_and_opt_tables_have_gates():
+    grid = [dict(table='XI', backend='grid', workers=4, blocks_per_s=180.0,
+                 efficiency=1.0, vs_thread=0.94)]
+    verdicts = bench_gate.compare('XI', grid, grid, 1.3)
+    assert _statuses(verdicts) == ['PASS', 'PASS']
+    opt = [dict(table='XII', system='water', n_det=100, mode='overhead',
+                overhead=6.2)]
+    assert _statuses(bench_gate.compare('XII', opt, opt, 1.3)) == ['PASS']
+    # overhead is max-mode: a 2x-slower moment accumulation fails
+    slow = [dict(opt[0], overhead=12.4)]
+    assert _statuses(bench_gate.compare('XII', slow, opt, 1.3)) == ['FAIL']
+
+
+def test_missing_baseline_artifact_skips(tmp_path, capsys, monkeypatch):
+    """A table whose BENCH_*.json is absent SKIPs at the artifact level —
+    the gate stays green on a partial checkout."""
+    monkeypatch.setattr(bench_gate, 'ROOT', tmp_path)   # no artifacts here
+    doc = tmp_path / 'fresh.json'
+    doc.write_text(json.dumps({'rows': [_serve_row(1, 1.0, 1.0)]}))
+    assert bench_gate.main(['--fresh', str(doc)]) == 0
+    assert 'SKIP XIV: no committed BENCH_serve.json' in capsys.readouterr().out
+
+
 def test_main_green_against_committed_artifacts(tmp_path):
     """--fresh mode: a fresh doc equal to the committed baselines gates
     green end to end (what the CI step runs, minus the benchmark)."""
     rows = []
-    for name in ('BENCH_sem.json', 'BENCH_scaling.json'):
+    for name in ('BENCH_sem.json', 'BENCH_scaling.json', 'BENCH_grid.json',
+                 'BENCH_opt.json', 'BENCH_serve.json'):
         p = ROOT / name
         if p.exists():
             rows.extend(json.loads(p.read_text())['rows'])

@@ -16,7 +16,8 @@ from repro.runtime import (GridBackend, GridConfig, GridWorkerClient,
                            QMCManager, ResultDatabase, RunControl,
                            make_backend)
 from repro.runtime.grid import DEAD, LIVE
-from repro.runtime.packets import HELLO, encode_json, frame
+from repro.runtime.packets import (ERROR, HELLO, WELCOME, FrameReader,
+                                   encode_json, frame)
 from repro.runtime.testing import GaussianSampler
 
 MU = -3.0
@@ -232,6 +233,92 @@ def test_grid_heartbeat_timeout_detects_silent_worker():
         backend.shutdown()
         for f in mgr.tree:
             f.stop()
+
+
+# ---------------------------------------------------------------------------
+# WELCOME contract: job re-adoption + store schema stamp
+# ---------------------------------------------------------------------------
+def test_grid_welcome_new_job_readopts_long_lived_worker():
+    """A long-lived worker host that outlives one run re-attaches to the
+    next manager: the WELCOME carries a different job, so the client
+    adopts the fresh (job, worker_id, run_key) identity and resets its
+    per-run progress — blocks never leak across runs."""
+    db = ResultDatabase()
+    b1 = GridBackend(0, net=GridConfig(local_workers=False))
+    mgr1 = QMCManager(GaussianSampler(), 'g-job-one',
+                      RunControl(max_blocks=6, poll_interval=0.02),
+                      db=db, backend=b1)
+    c = GridWorkerClient(b1.address, sampler=GaussianSampler(delay=0.005))
+    t1 = threading.Thread(target=c.run, daemon=True)
+    t1.start()
+    avg1 = mgr1.run()
+    t1.join(30)
+    assert not t1.is_alive()
+    assert avg1.n_blocks >= 6 and abs(avg1.energy - MU) < 0.1, avg1
+    job1, done1 = c.job, c.blocks_done
+    assert job1 == mgr1.job_id and done1 > 0
+    assert c.run_key == 'g-job-one'
+
+    b2 = GridBackend(0, net=GridConfig(local_workers=False))
+    mgr2 = QMCManager(GaussianSampler(), 'g-job-two',
+                      RunControl(max_blocks=6, poll_interval=0.02),
+                      db=db, backend=b2)
+    c.address, c._stop = b2.address, False      # host survives, run didn't
+    t2 = threading.Thread(target=c.run, daemon=True)
+    t2.start()
+    avg2 = mgr2.run()
+    t2.join(30)
+    assert not t2.is_alive()
+    assert avg2.n_blocks >= 6 and abs(avg2.energy - MU) < 0.1, avg2
+    assert c.job == mgr2.job_id != job1         # new identity adopted
+    assert c.run_key == 'g-job-two'
+    # progress counters were reset at adoption: the client's count is the
+    # second run's blocks alone, never the cross-run total
+    assert c.blocks_done == db.n_blocks('g-job-two')
+    assert all(b.job == mgr2.job_id for b in db.blocks('g-job-two'))
+
+
+def test_grid_worker_refuses_newer_store_schema():
+    """A WELCOME stamped with a newer store schema than the worker host
+    understands is refused loudly (ERROR frame upstream + raise) instead
+    of feeding blocks a newer validator may reject."""
+    srv = socket.create_server(('127.0.0.1', 0))
+    srv.settimeout(10.0)
+    errors = []
+
+    def fake_manager():
+        conn, _ = srv.accept()
+        conn.settimeout(10.0)
+        reader = FrameReader()
+        welcomed = False
+        while True:
+            data = conn.recv(1 << 16)
+            if not data:
+                return
+            reader.feed(data)
+            for kind, payload in reader.frames():
+                if kind == HELLO and not welcomed:
+                    welcomed = True
+                    conn.sendall(frame(WELCOME, encode_json(
+                        {'worker_id': 0, 'run_key': 'g-schema',
+                         'job': 'j-future', 'subblocks': 1, 'seed': 0,
+                         'schema': 999})))
+                elif kind == ERROR:
+                    errors.append(payload.decode('utf-8', 'replace'))
+                    return
+
+    th = threading.Thread(target=fake_manager, daemon=True)
+    th.start()
+    try:
+        c = GridWorkerClient(srv.getsockname(),
+                             sampler=GaussianSampler(), max_retries=0)
+        with pytest.raises(RuntimeError, match='schema v999 is newer'):
+            c.run()
+        th.join(10)
+        assert errors and 'schema v999' in errors[0]
+        assert c.blocks_done == 0               # not a single block shipped
+    finally:
+        srv.close()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,315 @@
+"""Multi-tenant service: scheduling, extend/fork, protocol, durability.
+
+Engine tests drive ``QMCService`` in-process with the jax-free Gaussian
+builder (the claims under test are scheduling/transport, not physics).
+The slow tier runs the real ``qmc_serve``/``qmc_client`` subprocesses —
+two concurrent client submits, extend over the wire, and the SIGKILL
+crash drill against a shared database file (ISSUE-9 acceptance).
+"""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.launch.spec import RunSpec
+from repro.runtime import ResultDatabase
+from repro.serve import (QMCService, QMCServiceServer, ServiceClient,
+                         ServiceError, fair_shares, gaussian_builder)
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), 'src')
+
+
+def _spec(**kw):
+    kw.setdefault('system', 'h2')
+    kw.setdefault('method', 'vmc')
+    kw.setdefault('n_workers', 2)
+    kw.setdefault('max_blocks', 6)
+    kw.setdefault('poll_interval', 0.02)
+    return RunSpec(**kw)
+
+
+@pytest.fixture()
+def svc():
+    s = QMCService(total_workers=4, builder=gaussian_builder,
+                   poll_interval=0.02)
+    yield s
+    s.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduler (pure)
+# ---------------------------------------------------------------------------
+def test_fair_shares_splits_evenly_with_remainder_to_earliest():
+    assert fair_shares(4, {'a': 4, 'b': 4}) == {'a': 2, 'b': 2}
+    assert fair_shares(5, {'a': 4, 'b': 4}) == {'a': 3, 'b': 2}
+
+
+def test_fair_shares_caps_at_request_and_redistributes():
+    assert fair_shares(8, {'a': 1, 'b': 4}) == {'a': 1, 'b': 4}
+    assert fair_shares(3, {'a': 1, 'b': 4, 'c': 4}) == \
+        {'a': 1, 'b': 1, 'c': 1}
+
+
+def test_fair_shares_starves_latest_when_runs_exceed_pool():
+    shares = fair_shares(2, {'a': 2, 'b': 2, 'c': 2})
+    assert shares == {'a': 1, 'b': 1, 'c': 0}
+    assert fair_shares(0, {'a': 2}) == {'a': 0}
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+def test_two_concurrent_runs_share_the_pool_and_converge(svc):
+    a = svc.submit(_spec(system='h2'))
+    b = svc.submit(_spec(system='water', seed=3))
+    sa, sb = svc.wait(a, 60), svc.wait(b, 60)
+    assert sa['state'] == 'done' and sb['state'] == 'done'
+    assert sa['run_key'] != sb['run_key']
+    for s in (sa, sb):
+        assert s['n_blocks'] >= 6
+        assert abs(s['energy'] - (-3.0)) < 0.1       # Gaussian mean
+    # fairness: neither tenant was starved (both accumulated blocks)
+    assert min(sa['n_blocks'], sb['n_blocks']) > 0
+
+
+def test_extend_continues_the_stored_average(svc):
+    a = svc.submit(_spec())
+    sa = svc.wait(a, 60)
+    key = sa['run_key']
+    before = svc.store.running_average(key)
+    c = svc.extend(key, 4)
+    # extend compacts first: the stored average is now an exact segment,
+    # bitwise equal to where the run stopped
+    assert svc.store.running_average(key) == before
+    sc = svc.wait(c, 60)
+    assert sc['state'] == 'done'
+    assert sc['run_key'] == key                      # same key, continued
+    assert sc['n_blocks'] > before.n_blocks
+
+
+def test_fork_gets_fresh_key_and_parent_reservoir(svc):
+    a = svc.submit(_spec())
+    sa = svc.wait(a, 60)
+    key = sa['run_key']
+    assert svc.store.load_reservoir(key) is not None  # checkpointed
+    d = svc.fork(key, tau=0.7)
+    sd = svc.wait(d, 60)
+    assert sd['state'] == 'done'
+    assert sd['run_key'] != key                      # critical field moved
+    assert sd['parent_key'] == key
+    assert svc.store.load_reservoir(sd['run_key']) is not None
+
+
+def test_cancel_running_and_queued(svc):
+    a = svc.submit(_spec(max_blocks=100000))
+    deadline = time.monotonic() + 30
+    while svc.status(a)['n_blocks'] == 0 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    svc.cancel(a)
+    sa = svc.wait(a, 60)
+    assert sa['state'] == 'cancelled'
+    assert sa['n_blocks'] < 100000
+
+
+def test_failed_build_reports_traceback():
+    def broken_builder(spec, db):
+        raise RuntimeError('no such wavefunction')
+
+    s = QMCService(builder=broken_builder, poll_interval=0.02)
+    try:
+        a = s.submit(_spec())
+        sa = s.wait(a, 30)
+        assert sa['state'] == 'failed'
+        assert 'no such wavefunction' in sa['detail']
+    finally:
+        s.close()
+
+
+def test_subscribe_streams_stats_to_a_final_state(svc):
+    a = svc.submit(_spec())
+    q = svc.subscribe(a)
+    events = []
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        ev = q.get(timeout=30)
+        events.append(ev)
+        if ev['state'] in ('done', 'failed', 'cancelled'):
+            break
+    assert events[-1]['state'] == 'done'
+    assert any(ev['event'] == 'stats' for ev in events)
+
+
+# ---------------------------------------------------------------------------
+# protocol: server + client round trip (in-process, real TCP)
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def served():
+    service = QMCService(total_workers=4, builder=gaussian_builder,
+                         poll_interval=0.02)
+    server = QMCServiceServer(service)
+    server.start()
+    yield server
+    server.stop()
+    service.close()
+
+
+def test_client_submit_status_list_wait(served):
+    from repro.launch.spec import spec_to_payload
+    host, port = served.address
+    with ServiceClient(host, port) as c:
+        assert c.ping()['pong']
+        run = c.submit(spec_to_payload(_spec()))
+        run = c.wait(run['run_id'], 60)
+        assert run['state'] == 'done'
+        assert abs(run['energy'] - (-3.0)) < 0.1
+        assert c.status(run['run_key'])['run_id'] == run['run_id']
+        assert len(c.list()) == 1
+
+
+def test_client_extend_fork_cancel_watch(served):
+    from repro.launch.spec import spec_to_payload
+    host, port = served.address
+    with ServiceClient(host, port) as c:
+        run = c.submit(spec_to_payload(_spec()))
+        events = list(c.watch(run['run_id']))
+        assert events[-1]['event'] == 'final'
+        assert events[-1]['state'] == 'done'
+        key = events[-1]['run_key']
+
+        ext = c.extend(key, 4)
+        ext = c.wait(ext['run_id'], 60)
+        assert ext['run_key'] == key and ext['state'] == 'done'
+
+        fk = c.fork(key, {'tau': 0.7})
+        fk = c.wait(fk['run_id'], 60)
+        assert fk['run_key'] != key and fk['parent_key'] == key
+
+        long = c.submit(spec_to_payload(_spec(max_blocks=100000)))
+        c.cancel(long['run_id'])
+        assert c.wait(long['run_id'], 60)['state'] == 'cancelled'
+
+
+def test_client_errors_are_structured(served):
+    host, port = served.address
+    with ServiceClient(host, port) as c:
+        with pytest.raises(ServiceError, match='unknown spec field'):
+            c.submit({'bogus_field': 1})
+        with pytest.raises(ServiceError, match='unknown run'):
+            c.status('nope')
+        with pytest.raises(ServiceError):
+            c._rpc('not_an_op')
+
+
+# ---------------------------------------------------------------------------
+# full stack: qmc_serve + qmc_client subprocesses (slow tier)
+# ---------------------------------------------------------------------------
+def _start_server(db_path, extra=()):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.Popen(
+        [sys.executable, '-m', 'repro.launch.qmc_serve', '--db', db_path,
+         '--listen', '127.0.0.1:0', '--pool', '4', '--builder', 'gaussian',
+         '--poll-interval', '0.02', *extra],
+        stdout=subprocess.PIPE, text=True, env=env)
+    port = None
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        line = proc.stdout.readline()
+        if 'listening on' in line:
+            port = int(line.rsplit(':', 1)[1].split()[0])
+            break
+    assert port, 'qmc_serve never reported its port'
+    return proc, port
+
+
+def _client(port, *args):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, '-m', 'repro.launch.qmc_client', '--port',
+         str(port), *args],
+        capture_output=True, text=True, timeout=120, env=env)
+
+
+@pytest.mark.slow
+def test_two_clients_submit_extend_over_the_wire(tmp_path):
+    db_path = str(tmp_path / 'serve.sqlite')
+    proc, port = _start_server(db_path)
+    try:
+        p1 = subprocess.Popen(
+            [sys.executable, '-m', 'repro.launch.qmc_client', '--port',
+             str(port), 'submit', '--system', 'h2', '--blocks', '6',
+             '--wait'],
+            stdout=subprocess.PIPE, text=True,
+            env=dict(os.environ, PYTHONPATH=SRC))
+        p2 = subprocess.Popen(
+            [sys.executable, '-m', 'repro.launch.qmc_client', '--port',
+             str(port), 'submit', '--system', 'water', '--seed', '3',
+             '--blocks', '6', '--wait'],
+            stdout=subprocess.PIPE, text=True,
+            env=dict(os.environ, PYTHONPATH=SRC))
+        out1, out2 = p1.communicate(timeout=120)[0], \
+            p2.communicate(timeout=120)[0]
+        assert p1.returncode == 0 and p2.returncode == 0
+        assert 'done' in out1 and 'done' in out2
+        assert 'E = -' in out1 and 'E = -' in out2   # correct energies
+
+        r = _client(port, 'extend', 'r1', '--blocks', '4', '--wait')
+        assert r.returncode == 0 and 'done' in r.stdout
+
+        r = _client(port, 'list')
+        assert r.stdout.count('done') == 3
+        _client(port, 'shutdown')
+        proc.wait(30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(30)
+
+
+@pytest.mark.slow
+def test_sigkill_service_loses_no_committed_blocks(tmp_path):
+    db_path = str(tmp_path / 'crash.sqlite')
+    proc, port = _start_server(db_path)
+    key = None
+    try:
+        r = _client(port, 'submit', '--blocks', '100000')
+        assert r.returncode == 0
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            r = _client(port, 'status', 'r1')
+            if 'E = -' in r.stdout:                  # blocks are landing
+                key = r.stdout.split()[1]
+                break
+            time.sleep(0.1)
+        assert key, 'no blocks committed before the drill'
+        os.kill(proc.pid, signal.SIGKILL)            # crash mid-run
+    finally:
+        proc.wait(30)
+        if proc.poll() is None:                      # pragma: no cover
+            proc.kill()
+
+    db = ResultDatabase(db_path)                     # WAL crash recovery
+    n = db.n_blocks(key)
+    assert n > 0                                     # committed blocks live
+    report = db.validate_all(key)
+    assert report['clean'] and report['rejects'] == {}
+    assert db.get_run_spec(key) is not None          # registry survived
+    db.close()
+
+    # restart against the same file: extend the stored key over the wire
+    proc2, port2 = _start_server(db_path)
+    try:
+        out = _client(port2, 'extend', key, '--blocks', '4', '--wait')
+        assert out.returncode == 0 and 'done' in out.stdout
+        db = ResultDatabase(db_path)
+        assert db.n_blocks(key) > n - 1              # continued, not reset
+        db.close()
+        _client(port2, 'shutdown')
+        proc2.wait(30)
+    finally:
+        if proc2.poll() is None:
+            proc2.kill()
+            proc2.wait(30)

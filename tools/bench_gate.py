@@ -5,13 +5,15 @@ Absolute wall-times are machine-bound — a laptop baseline means nothing on
 a CI runner — so the gate only checks *machine-relative* metrics:
 
 * ``speedup``-style ratios (maintained-inverse vs recompute, shared-inverse
-  vs slogdet, ensemble-flattened vs vmap): both sides of the ratio ran on
+  vs slogdet, ensemble-flattened vs vmap, grid ``efficiency``/``vs_thread``,
+  service ``vs_single``/``fairness``): both sides of the ratio ran on
   the same box in the same process, so the ratio travels across machines.
   Mode ``min``: a fresh ratio may not drop below ``baseline / slack``.
-* fitted scaling ``exponent``s (Table XIII): log-log slopes are
-  dimensionless.  Mode ``max``: a fresh exponent may not exceed
-  ``baseline * slack`` — and the screened pipeline must stay sub-quadratic
-  in absolute terms (``HARD_MAX``), whatever the baseline says.
+* fitted scaling ``exponent``s (Table XIII) and overhead ratios that must
+  stay LOW (Table XII's opt-vmc ``overhead``): dimensionless.  Mode
+  ``max``: a fresh value may not exceed ``baseline * slack`` — and the
+  screened pipeline must stay sub-quadratic in absolute terms
+  (``HARD_MAX``), whatever the baseline says.
 
 Rows are matched on per-table identity columns; baseline rows with no
 fresh counterpart (e.g. ``--full``-only sizes under a quick fresh run) are
@@ -36,13 +38,21 @@ GATES = {
     'VI': [('speedup', 'min', ('system', 'n_elec', 'walkers'))],
     'VIII': [('speedup', 'min', ('system', 'n_elec', 'walkers'))],
     'X': [('speedup', 'min', ('system', 'n_elec', 'n_det', 'walkers'))],
+    'XI': [('efficiency', 'min', ('backend', 'workers')),
+           ('vs_thread', 'min', ('backend', 'workers'))],
+    'XII': [('overhead', 'max', ('system', 'n_det'))],
     'XIII': [('exponent', 'max', ('system', 'method'))],
+    'XIV': [('vs_single', 'min', ('runs', 'pool')),
+            ('fairness', 'min', ('runs', 'pool'))],
 }
 BASELINES = {
     'VI': 'BENCH_ensemble.json',
     'VIII': 'BENCH_sem.json',
     'X': 'BENCH_multidet.json',
+    'XI': 'BENCH_grid.json',
+    'XII': 'BENCH_opt.json',
     'XIII': 'BENCH_scaling.json',
+    'XIV': 'BENCH_serve.json',
 }
 # absolute ceilings enforced on fresh rows regardless of the baseline:
 # the screened pipeline's whole point is sub-quadratic scaling
@@ -105,7 +115,8 @@ def run_fresh(tables):
     sys.path.insert(0, str(ROOT / 'src'))
     from benchmarks import tables as T
     fns = {'VI': T.table_ensemble, 'VIII': T.table_sem,
-           'X': T.table_multidet, 'XIII': T.table_scaling}
+           'X': T.table_multidet, 'XI': T.table_grid, 'XII': T.table_opt,
+           'XIII': T.table_scaling, 'XIV': T.table_serve}
     rows = []
     for tab in tables:
         rows.extend(fns[tab](quick=True))
