@@ -27,8 +27,12 @@ wavefunction-construction cost, screened vs dense, over the growing
 Table XIV is the multi-tenant service-throughput table (N concurrent
 ``QMCService`` runs over one fixed worker pool vs the whole pool behind a
 single run — aggregate blocks/s, ``vs_single`` and the min/max ``fairness``
-ratio).  TPU-side roofline numbers live in experiments/roofline +
-EXPERIMENTS.md §Roofline.
+ratio); Table XV is the fused-sweep SEM table (whole-sweep fused
+propagation vs the per-move dispatch loop at the same walker count, the
+per-walker sweep cost against the committed Table VIII baseline, and the
+mixed-precision resting state footprint per ``cfg.precision`` — gated
+against the committed BENCH_fused.json).  TPU-side roofline numbers live
+in experiments/roofline + EXPERIMENTS.md §Roofline.
 """
 from __future__ import annotations
 
@@ -50,7 +54,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument('--full', action='store_true')
     ap.add_argument('--tables',
-                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII,XIII,XIV')
+                    default='I,II,III,IV,V,VI,VII,VIII,IX,X,XI,XII,XIII,'
+                            'XIV,XV')
     ap.add_argument('--json', metavar='OUT.json', default=None,
                     help='also write rows as structured JSON')
     args = ap.parse_args(argv)
@@ -62,7 +67,7 @@ def main(argv=None) -> int:
            'VIII': T.table_sem, 'IX': T.table_runtime,
            'X': T.table_multidet, 'XI': T.table_grid,
            'XII': T.table_opt, 'XIII': T.table_scaling,
-           'XIV': T.table_serve}
+           'XIV': T.table_serve, 'XV': T.table_fused}
     unknown = want - set(fns)
     if unknown:
         print(f'# unknown tables ignored: {",".join(sorted(unknown))} '

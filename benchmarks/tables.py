@@ -824,3 +824,99 @@ def table_serve(quick=True):
             vs_single=round(rate / base, 2),
             fairness=round(min(per_run) / max(per_run), 3)))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Table XV: fused-sweep SEM propagation + mixed-precision footprint
+# ---------------------------------------------------------------------------
+def table_fused(quick=True):
+    """Whole-sweep fusion vs the per-move SEM dispatch loop (DESIGN.md §13).
+
+    Timing rows (one per walker count): the same 60-electron bench system
+    propagated one full sweep by
+
+    * ``sem_sweep_s``   — the per-move ``SEMVMCPropagator`` path
+      (``method='dense'``): n_e separate AO/MO/Jastrow/update dispatches;
+    * ``fused_sweep_s`` — ``sem._fused_cfg`` of the same config
+      (``method='fused'``, ``mo_method='dense'``): ONE batched
+      proposal/AO/MO/e-n-Jastrow precompute plus one scan per spin block,
+      the energy pass still on the dense pipeline.
+
+    Both include the shared post-sweep energy pass.  ``speedup`` =
+    sem_sweep_s / fused_sweep_s — same walkers, same box, so the ratio is
+    machine-relative and gated by ``tools/bench_gate.py``.
+    ``walker_move_us`` is the fused per-walker per-move cost (compare
+    Table VIII's ``sem_move_us / walkers``); ``vs_table_viii`` divides the
+    committed BENCH_sem.json per-walker sweep time by the fresh fused one
+    when that artifact is present (the ISSUE's >= 2x acceptance).
+
+    Memory rows (one per precision): resting footprint of the maintained
+    inverses via ``slater.state_bytes`` at ``precision_bytes(p)``;
+    ``mem_ratio`` = stored bytes / fp32 bytes (0.5 for bf16/fp16 — must
+    never regress upward, gate mode 'max').
+    """
+    import json as _json
+    from pathlib import Path
+
+    from repro.core import sem as sem_mod
+    from repro.core import slater
+    from repro.core.driver import Population
+    from repro.core.sem import SEMVMCPropagator
+    from repro.systems.bench import build_bench_wavefunction, \
+        make_bench_system
+
+    s = make_bench_system('micro-peptide', n_elec=60, seed=5)
+    n_e = s.mol.n_elec
+    pop = Population()
+    walker_counts = [64] if quick else [64, 256]
+
+    base_walker_sweep_s = None
+    bench_sem = Path(__file__).resolve().parents[1] / 'BENCH_sem.json'
+    if bench_sem.exists():
+        try:
+            doc = _json.loads(bench_sem.read_text())
+            for row in doc.get('rows', []):
+                if row.get('table') == 'VIII' and row.get('n_elec') == n_e:
+                    base_walker_sweep_s = (float(row['sem_sweep_s'])
+                                           / float(row['walkers']))
+        except (ValueError, KeyError):
+            pass
+
+    rows = []
+    for W in walker_counts:
+        cfg, params = build_bench_wavefunction(s, method='dense')
+        per = SEMVMCPropagator(cfg, step_size=0.4)
+        state = per.init(params, jax.random.PRNGKey(0), W)
+        f_per = jax.jit(lambda p, st, k: per.propagate(p, st, k, pop))
+        t_per = _timeit(f_per, params, state, jax.random.PRNGKey(1),
+                        repeats=5)
+
+        fcfg = sem_mod._fused_cfg(cfg)
+        fused = SEMVMCPropagator(fcfg, step_size=0.4)
+        fstate = fused.init(params, jax.random.PRNGKey(0), W)
+        f_fused = jax.jit(lambda p, st, k: fused.propagate(p, st, k, pop))
+        t_fused = _timeit(f_fused, params, fstate, jax.random.PRNGKey(1),
+                          repeats=5)
+
+        row = dict(
+            table='XV', system=s.name, n_elec=n_e, walkers=W,
+            sem_sweep_s=round(t_per, 4), fused_sweep_s=round(t_fused, 4),
+            walker_move_us=round(1e6 * t_fused / (n_e * W), 2),
+            speedup=round(t_per / t_fused, 2))
+        if base_walker_sweep_s is not None:
+            row['vs_table_viii'] = round(
+                base_walker_sweep_s / (t_fused / W), 2)
+        rows.append(row)
+
+    n_up = s.mol.n_up
+    n_dn = n_e - n_up
+    W_mem = walker_counts[-1]
+    fp32_bytes = slater.state_bytes(n_up, n_dn, W_mem, 4)
+    for p in slater.PRECISIONS:
+        nbytes = slater.state_bytes(n_up, n_dn, W_mem,
+                                    slater.precision_bytes(p))
+        rows.append(dict(
+            table='XV', system=s.name, n_elec=n_e, precision=p,
+            walkers=W_mem, state_mb=round(nbytes / 2 ** 20, 3),
+            mem_ratio=round(nbytes / fp32_bytes, 3)))
+    return rows

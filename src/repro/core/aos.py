@@ -45,6 +45,23 @@ def _monomial_1d(x: jnp.ndarray, n: jnp.ndarray):
     return f, df, d2f
 
 
+def _basis_consts(basis: BasisSet):
+    """Basis constants pinned to (int32, int32, f32, f32, f32).
+
+    ``BasisSet`` holds host numpy (float64) arrays; a bare ``jnp.asarray``
+    under ``jax_enable_x64`` promotes them — and every AO intermediate
+    downstream, i.e. the whole SEM per-move sweep — to fp64.  Explicit pins
+    keep the evaluation pipeline fp32 regardless of the ambient
+    default-dtype config (regression:
+    ``tests/test_precision.py::test_sweep_jaxpr_has_no_fp64``).
+    """
+    return (jnp.asarray(basis.ao_atom, jnp.int32),
+            jnp.asarray(basis.ao_pow, jnp.int32),
+            jnp.asarray(basis.prim_coeff, jnp.float32),
+            jnp.asarray(basis.prim_exp, jnp.float32),
+            jnp.asarray(basis.atom_radius2, jnp.float32))
+
+
 def eval_ao_block(basis: BasisSet, coords: jnp.ndarray, r_elec: jnp.ndarray):
     """Evaluate all AOs at electron positions.
 
@@ -73,11 +90,7 @@ def eval_ao_block(basis: BasisSet, coords: jnp.ndarray, r_elec: jnp.ndarray):
         # schedules the batched elementwise pipeline measurably better than
         # the same graph with a single fused W*n_e axis (CPU and TPU).
         return jax.vmap(lambda r: eval_ao_block(basis, coords, r))(r_elec)
-    ao_atom = jnp.asarray(basis.ao_atom)
-    ao_pow = jnp.asarray(basis.ao_pow)            # (n_ao, 3)
-    prim_c = jnp.asarray(basis.prim_coeff)        # (n_ao, P)
-    prim_a = jnp.asarray(basis.prim_exp)          # (n_ao, P)
-    radius2 = jnp.asarray(basis.atom_radius2)     # (n_atoms,)
+    ao_atom, ao_pow, prim_c, prim_a, radius2 = _basis_consts(basis)
 
     dxyz_at = r_elec[..., None, :] - coords                  # (..., n_at, 3)
     r2_at = jnp.sum(dxyz_at * dxyz_at, axis=-1)              # (..., n_at)
@@ -145,11 +158,7 @@ def eval_ao_values(basis: BasisSet, coords: jnp.ndarray,
       vals: (n_ao, N) float32 AO values, exact zeros outside atomic radii.
       atom_active: (N, n_atoms) bool — point within atomic radius.
     """
-    ao_atom = jnp.asarray(basis.ao_atom)
-    ao_pow = jnp.asarray(basis.ao_pow)                       # (n_ao, 3)
-    prim_c = jnp.asarray(basis.prim_coeff)                   # (n_ao, P)
-    prim_a = jnp.asarray(basis.prim_exp)                     # (n_ao, P)
-    radius2 = jnp.asarray(basis.atom_radius2)                # (n_atoms,)
+    ao_atom, ao_pow, prim_c, prim_a, radius2 = _basis_consts(basis)
 
     dxyz_at = r_elec[..., None, :] - coords                  # (N, n_at, 3)
     r2_at = jnp.sum(dxyz_at * dxyz_at, axis=-1)              # (N, n_at)
@@ -202,10 +211,9 @@ def eval_ao_block_screened(basis: BasisSet, coords: jnp.ndarray,
 
     Returns Bp: (N, K, 5) float32 packed values (zeros at inactive slots).
     """
-    ao_atom = jnp.asarray(basis.ao_atom)[idx]             # (N, K)
-    ao_pow = jnp.asarray(basis.ao_pow)[idx]               # (N, K, 3)
-    prim_c = jnp.asarray(basis.prim_coeff)[idx]           # (N, K, P)
-    prim_a = jnp.asarray(basis.prim_exp)[idx]
+    ao_atom, ao_pow, prim_c, prim_a, _ = _basis_consts(basis)
+    ao_atom, ao_pow = ao_atom[idx], ao_pow[idx]           # (N, K), (N, K, 3)
+    prim_c, prim_a = prim_c[idx], prim_a[idx]             # (N, K, P)
 
     d = r_elec[..., None, :] - coords[ao_atom]            # (N, K, 3)
     r2 = jnp.sum(d * d, axis=-1)                          # (N, K)
@@ -245,10 +253,9 @@ def eval_ao_values_screened(basis: BasisSet, coords: jnp.ndarray,
     proposed move instead of O(n_ao).  Returns vals: (N, K), zeros at
     inactive slots.
     """
-    ao_atom = jnp.asarray(basis.ao_atom)[idx]
-    ao_pow = jnp.asarray(basis.ao_pow)[idx]
-    prim_c = jnp.asarray(basis.prim_coeff)[idx]
-    prim_a = jnp.asarray(basis.prim_exp)[idx]
+    ao_atom, ao_pow, prim_c, prim_a, _ = _basis_consts(basis)
+    ao_atom, ao_pow = ao_atom[idx], ao_pow[idx]
+    prim_c, prim_a = prim_c[idx], prim_a[idx]
     d = r_elec[..., None, :] - coords[ao_atom]
     r2 = jnp.sum(d * d, axis=-1)
     expo = jnp.exp(-prim_a * r2[..., None])

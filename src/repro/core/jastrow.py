@@ -62,7 +62,10 @@ def jastrow_state(params: JastrowParams, r_elec: jnp.ndarray,
     r = jnp.sqrt(jnp.where(eye, 1.0, r2))                   # guard diagonal
     spin_up = jnp.arange(n_e) < n_up
     parallel = spin_up[:, None] == spin_up[None, :]
-    a_ee = jnp.where(parallel, 0.25, 0.5).astype(r.dtype)   # cusp conditions
+    # cusp conditions; branch values pinned to the position dtype so
+    # jax_enable_x64 can't materialize f64 intermediates (test_precision)
+    a_ee = jnp.where(parallel, jnp.asarray(0.25, r.dtype),
+                     jnp.asarray(0.5, r.dtype))
     u, up, upp = _pade(r, a_ee, params.b_ee)
     mask = (~eye).astype(r.dtype)
     val_ee = 0.5 * jnp.sum(u * mask)
@@ -104,7 +107,9 @@ def jastrow_delta_one_electron(params: JastrowParams, r_elec: jnp.ndarray,
     """
     n_e = r_elec.shape[0]
     spin_up = jnp.arange(n_e) < n_up
-    a_ee = jnp.where(spin_up == spin_up[j], 0.25, 0.5).astype(r_elec.dtype)
+    a_ee = jnp.where(spin_up == spin_up[j],
+                     jnp.asarray(0.25, r_elec.dtype),
+                     jnp.asarray(0.5, r_elec.dtype))
     other = (jnp.arange(n_e) != j).astype(r_elec.dtype)
 
     def _ee(rj):

@@ -51,6 +51,7 @@ like the paper (~1.1x the measured max active count) to stay exact.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -133,6 +134,39 @@ def _move_ci_ratios(cfg, P, g, row, holes, parts, r_other):
     return multidet_ratios_ref(P, g, row, holes, parts, ci.coeffs, r_other)
 
 
+# fp16 resting state is stored with this exact power-of-two exponent
+# shift: minv entries reach ~1e5 on the bench systems while float16
+# saturates at 65504, so the raw cast would overflow to inf.  A
+# power-of-two scale only moves the exponent — zero mantissa error on
+# both cast directions — and extends the representable range to ~1e6.
+# bf16 carries the full fp32 exponent range and needs no shift.
+_FP16_SCALE = 16.0
+
+
+def _to_compute(x, cfg):
+    """Storage -> fp32 compute dtype at the sweep/use boundary.
+
+    The mixed-precision contract (DESIGN.md §13): ratios, Sherman–Morrison
+    updates, Newton–Schulz refinement and energy contractions all
+    accumulate in fp32; only the resting (W, n, n) state is quantized.
+    At the default ``precision='fp32'`` this returns ``x`` itself — the
+    policy is structurally bitwise-inert (tests/test_precision.py).
+    """
+    if cfg.precision == 'fp32':
+        return x
+    x32 = x.astype(jnp.float32)
+    return x32 * _FP16_SCALE if cfg.precision == 'fp16' else x32
+
+
+def _to_storage(x, cfg):
+    """fp32 compute -> storage dtype (no-op object passthrough at fp32)."""
+    if cfg.precision == 'fp32':
+        return x
+    if cfg.precision == 'fp16':
+        return (x * (1.0 / _FP16_SCALE)).astype(jnp.float16)
+    return x.astype(slater.storage_dtype(cfg.precision))
+
+
 def _empty_ci_state(W, dtype):
     """Zero-size CI leaves for the single-determinant ensemble.
 
@@ -206,9 +240,13 @@ def _energy_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
         return jas.value, e_kin, e_pot
 
     jv, e_kin, e_pot = jax.vmap(_tail)(R, sgrad, slap)
-    return SEMEnsemble(r=R, minv_up=minv_up, minv_dn=minv_dn, sign=sign,
+    # storage boundary: the (W, n, n) inverses and P-tables rest in the
+    # precision policy's dtype; everything above accumulated in fp32
+    return SEMEnsemble(r=R, minv_up=_to_storage(minv_up, cfg),
+                       minv_dn=_to_storage(minv_dn, cfg), sign=sign,
                        logdet=logdet, log_psi=logdet + log_ci + jv,
-                       e_loc=e_kin + e_pot, p_up=p_up, p_dn=p_dn,
+                       e_loc=e_kin + e_pot, p_up=_to_storage(p_up, cfg),
+                       p_dn=_to_storage(p_dn, cfg),
                        rdet_up=rdet_up, rdet_dn=rdet_dn)
 
 
@@ -267,7 +305,7 @@ def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
         def _draw(k):
             ke, ku = jax.random.split(k)
             return (jax.random.normal(ke, (3,), r.dtype),
-                    jax.random.uniform(ku, ()))
+                    jax.random.uniform(ku, (), r.dtype))
 
         eta, u_rand = jax.vmap(_draw)(keys)
         r_old = r[:, j]                                   # (W, 3)
@@ -342,6 +380,166 @@ def _sweep_spin_block(cfg, params, A_blk, offset, n_blk, wkeys, step_size,
     return jax.lax.scan(_move, carry, jnp.arange(n_blk))
 
 
+def _fused_phi_block(cfg, params, A_blk, pts):
+    """Proposal MO values for a whole block's sweep in ONE batched pass.
+
+    ``pts``: (N, 3) flattened proposed positions (N = W * n_blk).  Returns
+    (N, n_occ | n_orb) — the same screened-or-dense arithmetic as the
+    per-move path of ``_sweep_spin_block``, evaluated once instead of
+    n_blk times.
+    """
+    scr = cfg.screening
+    if scr is not None and not scr.exhaustive:
+        from . import screening as scr_mod
+        a_idx, a_act, _ = scr_mod.active_ao_lists(scr, pts)
+        vals_p = aos.eval_ao_values_screened(cfg.basis, params.coords, pts,
+                                             a_idx, a_act)
+        if scr.mo_cells is not None:
+            mo_idx, mo_valid = scr_mod.active_mo_lists(scr, pts)
+            return scr_mod.gather_phi(A_blk, a_idx, vals_p, mo_idx,
+                                      mo_valid)
+        return scr_mod.phi_from_packed(A_blk, a_idx, vals_p,
+                                       cfg.basis.n_ao)
+    vals, _ = aos.eval_ao_values(cfg.basis, params.coords, pts)  # (ao, N)
+    return (A_blk @ vals).T
+
+
+def _fused_phi_all(cfg, params, A_up, A_dn, r_prop):
+    """Proposal MO values for BOTH spin blocks from one shared AO pass.
+
+    The AO-side work (cell lookup, screened or dense AO evaluation) does
+    not depend on the MO panel, so all W * n_e proposals go through a
+    single batched pass and only the final panel product is per-spin.
+    Two half-population ``_fused_phi_block`` calls measure ~3x slower
+    than this combined pass on CPU — XLA schedules the two separate AO
+    evaluations far worse than one — which is most of the fused sweep's
+    advantage at large W.
+
+    r_prop: (W, n_e, 3).  Returns (phi_up (W, n_up, cols),
+    phi_dn (W, n_dn, cols) or None when n_dn == 0).
+    """
+    W, n_e = r_prop.shape[:2]
+    n_up, n_dn = cfg.n_up, cfg.n_dn
+    pts = r_prop.reshape(W * n_e, 3)
+    scr = cfg.screening
+
+    def _split(x):
+        xb = x.reshape((W, n_e) + x.shape[1:])
+        return (xb[:, :n_up].reshape((W * n_up,) + x.shape[1:]),
+                xb[:, n_up:].reshape((W * n_dn,) + x.shape[1:]))
+
+    if scr is not None and not scr.exhaustive:
+        from . import screening as scr_mod
+        a_idx, a_act, _ = scr_mod.active_ao_lists(scr, pts)
+        vals = aos.eval_ao_values_screened(cfg.basis, params.coords, pts,
+                                           a_idx, a_act)
+        iu, idn = _split(a_idx)
+        vu, vdn = _split(vals)
+        if scr.mo_cells is not None:
+            mo_idx, mo_valid = scr_mod.active_mo_lists(scr, pts)
+            miu, midn = _split(mo_idx)
+            mvu, mvdn = _split(mo_valid)
+            phi_up = scr_mod.gather_phi(A_up, iu, vu, miu, mvu)
+            phi_dn = (scr_mod.gather_phi(A_dn, idn, vdn, midn, mvdn)
+                      if n_dn > 0 else None)
+        else:
+            phi_up = scr_mod.phi_from_packed(A_up, iu, vu, cfg.basis.n_ao)
+            phi_dn = (scr_mod.phi_from_packed(A_dn, idn, vdn,
+                                              cfg.basis.n_ao)
+                      if n_dn > 0 else None)
+        return (phi_up.reshape(W, n_up, -1),
+                phi_dn.reshape(W, n_dn, -1) if phi_dn is not None else None)
+    vals, _ = aos.eval_ao_values(cfg.basis, params.coords, pts)  # (ao, N)
+    if n_dn == 0:
+        return (A_up @ vals).T.reshape(W, n_up, -1), None
+    if (A_up.shape == A_dn.shape
+            and (A_up is A_dn or A_up.shape[0] == cfg.n_up == cfg.n_dn
+                 and cfg.shared_orbitals)):
+        # closed shell / CI: one panel serves both blocks -> ONE GEMM in
+        # the AO-major layout, split afterwards
+        phi = (A_up @ vals).T.reshape(W, n_e, -1)
+        return phi[:, :n_up], phi[:, n_up:]
+    chi = vals.T.reshape(W, n_e, -1)
+    phi_up = jnp.einsum('wea,oa->weo', chi[:, :n_up], A_up)
+    phi_dn = jnp.einsum('wea,oa->weo', chi[:, n_up:], A_dn)
+    return phi_up, phi_dn
+
+
+def _fused_sweeps(cfg, params, ens, minv_up, minv_dn, p_up, p_dn, wkeys,
+                  step_size):
+    """Both spin blocks' sweeps through the fused path (DESIGN.md §13).
+
+    Precomputes, in one batched pass each, everything the sweep needs that
+    does not depend on intra-sweep state — each electron is trialed
+    exactly once, at its sweep-start position, so all proposals, their MO
+    values and the e-n Jastrow deltas are known up front.  The remaining
+    sequential accept/update algebra runs as one ``lax.scan``
+    (cfg.method == 'fused') or one Pallas kernel call
+    (cfg.method == 'fused-kernel', walker tile from the measured
+    autotuner) per spin block.  RNG consumption matches the per-move path
+    (``fold_in(walker_key, j)`` then normal/uniform), so the proposal
+    stream is the same; statistics agree with the per-move sweep in
+    distribution, not move-for-move.
+
+    Returns (r, minv_up, minv_dn, sign, logdet, accepts) — ``accepts`` the
+    (n_e,) per-move mean acceptance fractions.
+    """
+    from repro.kernels.fused_sweep.ops import fused_sweep_block
+    ci = cfg.ci
+    W, n_e = ens.r.shape[:2]
+    n_up, n_dn = cfg.n_up, cfg.n_dn
+    A_up, A_dn = _mo_blocks(cfg, params)
+    jas = params.jastrow
+
+    def _draw_all(k):
+        def _one(j):
+            ke, ku = jax.random.split(jax.random.fold_in(k, j))
+            return (jax.random.normal(ke, (3,), ens.r.dtype),
+                    jax.random.uniform(ku, (), ens.r.dtype))
+        return jax.vmap(_one)(jnp.arange(n_e))
+
+    eta, u_rand = jax.vmap(_draw_all)(wkeys)        # (W, n_e, 3), (W, n_e)
+    r_prop = ens.r + step_size * eta
+    logu = jnp.log(jnp.maximum(u_rand, 1e-38))
+
+    # e-n Jastrow delta per proposal: depends only on the endpoints
+    def _en_sum(pts):
+        d = pts[..., None, :] - params.coords
+        rn = jnp.sqrt(jnp.sum(d * d, axis=-1) + 1e-20)
+        a = -params.charges * jas.a_en
+        return jnp.sum(a * rn / (1.0 + jas.b_en * rn), axis=-1)
+
+    en_delta = _en_sum(r_prop) - _en_sum(ens.r)     # (W, n_e)
+
+    use_kernel = cfg.method == 'fused-kernel'
+    tile_w = 8
+    if use_kernel:
+        from repro.kernels.fused_sweep.autotune import best_tile_w
+        tile_w = best_tile_w(n_e, W, cfg.precision)
+
+    phi_up, phi_dn = _fused_phi_all(cfg, params, A_up, A_dn, r_prop)
+    ci_up = (p_up, ens.rdet_up, ens.rdet_dn, ci.holes_up, ci.parts_up,
+             ci.coeffs) if ci is not None else None
+    r, minv_up, sign, logdet, _, rdet_up, acc_up = fused_sweep_block(
+        minv_up, phi_up, ens.r, r_prop[:, :n_up], en_delta[:, :n_up],
+        logu[:, :n_up], ens.sign, ens.logdet, jas.b_ee, ci_up,
+        offset=0, n_up=n_up, use_kernel=use_kernel, tile_w=tile_w)
+
+    if n_dn > 0:
+        ci_dn = (p_dn, ens.rdet_dn, rdet_up, ci.holes_dn, ci.parts_dn,
+                 ci.coeffs) if ci is not None else None
+        r, minv_dn, sign, logdet, _, _, acc_dn = fused_sweep_block(
+            minv_dn, phi_dn, r, r_prop[:, n_up:], en_delta[:, n_up:],
+            logu[:, n_up:], sign, logdet, jas.b_ee, ci_dn,
+            offset=n_up, n_up=n_up, use_kernel=use_kernel, tile_w=tile_w)
+        accepts = jnp.concatenate([
+            jnp.mean(acc_up.astype(jnp.float32), axis=0),
+            jnp.mean(acc_dn.astype(jnp.float32), axis=0)])
+    else:
+        accepts = jnp.mean(acc_up.astype(jnp.float32), axis=0)
+    return r, minv_up, minv_dn, sign, logdet, accepts
+
+
 class SEMVMCPropagator:
     """Metropolis sampling of |Psi_T|^2 by single-electron sweeps (§II.A).
 
@@ -377,37 +575,48 @@ class SEMVMCPropagator:
         ci = cfg.ci
         ens = state.ens
         wkeys = pop.walker_keys(key, ens.r.shape[0])
-        A_up, A_dn = _mo_blocks(cfg, params)
+        # compute boundary: stored (possibly quantized) state -> fp32; at
+        # precision='fp32' these are the stored arrays themselves
+        minv_up = _to_compute(ens.minv_up, cfg)
+        minv_dn = _to_compute(ens.minv_dn, cfg)
+        p_up = _to_compute(ens.p_up, cfg)
+        p_dn = _to_compute(ens.p_dn, cfg)
 
-        if ci is not None:
-            carry = (ens.r, ens.minv_up, ens.sign, ens.logdet,
-                     ens.p_up, ens.rdet_up)
-            (r, minv_up, sign, logdet, _, rdet_up), acc_up = \
-                _sweep_spin_block(
-                    cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size,
-                    carry, ci_args=(ci.holes_up, ci.parts_up, ens.rdet_dn))
+        if cfg.method in ('fused', 'fused-kernel'):
+            r, minv_up, minv_dn, sign, logdet, accepts = _fused_sweeps(
+                cfg, params, ens, minv_up, minv_dn, p_up, p_dn, wkeys,
+                self.step_size)
         else:
-            carry = (ens.r, ens.minv_up, ens.sign, ens.logdet)
-            (r, minv_up, sign, logdet), acc_up = _sweep_spin_block(
-                cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size,
-                carry)
-        minv_dn = ens.minv_dn
-        if cfg.n_dn > 0:
+            A_up, A_dn = _mo_blocks(cfg, params)
             if ci is not None:
-                carry = (r, minv_dn, sign, logdet, ens.p_dn, ens.rdet_dn)
-                (r, minv_dn, sign, logdet, _, _), acc_dn = \
+                carry = (ens.r, minv_up, ens.sign, ens.logdet,
+                         p_up, ens.rdet_up)
+                (r, minv_up, sign, logdet, _, rdet_up), acc_up = \
                     _sweep_spin_block(
-                        cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
+                        cfg, params, A_up, 0, cfg.n_up, wkeys,
                         self.step_size, carry,
-                        ci_args=(ci.holes_dn, ci.parts_dn, rdet_up))
+                        ci_args=(ci.holes_up, ci.parts_up, ens.rdet_dn))
             else:
-                carry = (r, minv_dn, sign, logdet)
-                (r, minv_dn, sign, logdet), acc_dn = _sweep_spin_block(
-                    cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
-                    self.step_size, carry)
-            accepts = jnp.concatenate([acc_up, acc_dn])
-        else:
-            accepts = acc_up
+                carry = (ens.r, minv_up, ens.sign, ens.logdet)
+                (r, minv_up, sign, logdet), acc_up = _sweep_spin_block(
+                    cfg, params, A_up, 0, cfg.n_up, wkeys, self.step_size,
+                    carry)
+            if cfg.n_dn > 0:
+                if ci is not None:
+                    carry = (r, minv_dn, sign, logdet, p_dn, ens.rdet_dn)
+                    (r, minv_dn, sign, logdet, _, _), acc_dn = \
+                        _sweep_spin_block(
+                            cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
+                            self.step_size, carry,
+                            ci_args=(ci.holes_dn, ci.parts_dn, rdet_up))
+                else:
+                    carry = (r, minv_dn, sign, logdet)
+                    (r, minv_dn, sign, logdet), acc_dn = _sweep_spin_block(
+                        cfg, params, A_dn, cfg.n_up, cfg.n_dn, wkeys,
+                        self.step_size, carry)
+                accepts = jnp.concatenate([acc_up, acc_dn])
+            else:
+                accepts = acc_up
 
         # one full MO tensor pass: the energy needs it, and its D blocks
         # feed the corrector/refresh that bound fp32 drift
@@ -458,4 +667,28 @@ class SEMVMCPropagator:
 register_method('sem-vmc',
                 lambda cfg, tau, e_trial, equil_steps:
                 SEMVMCPropagator(cfg, step_size=tau),
+                default_tau=0.3)
+
+
+def _fused_cfg(cfg: WavefunctionConfig) -> WavefunctionConfig:
+    """Route the sweep through the fused path, honoring kernel selection.
+
+    ``fused-vmc`` is the same propagator with ``cfg.method`` rewritten:
+    'kernel' upgrades to 'fused-kernel' (one Pallas call per spin block),
+    anything else to 'fused' (one ``lax.scan``).  The pre-rewrite method
+    is recorded in ``mo_method`` so the post-sweep energy pass keeps the
+    ORIGINAL MO-product pipeline — a dense config's batched GEMM, a
+    kernel config's Pallas product — instead of silently degrading to
+    the sparse default (wavefunction._mo_product_method).
+    """
+    if cfg.method in ('fused', 'fused-kernel'):
+        return cfg
+    method = 'fused-kernel' if cfg.method == 'kernel' else 'fused'
+    return dataclasses.replace(cfg, method=method,
+                               mo_method=cfg.mo_method or cfg.method)
+
+
+register_method('fused-vmc',
+                lambda cfg, tau, e_trial, equil_steps:
+                SEMVMCPropagator(_fused_cfg(cfg), step_size=tau),
                 default_tau=0.3)

@@ -200,6 +200,43 @@ def state_bytes(n_up: int, n_dn: int, n_walkers: int = 1,
     spin block plus the running sign/log-determinant scalars per walker —
     the irreducible O(n^2) footprint the screened pipeline's memory budget
     (``screening.memory_budget``, Table XIII) reports alongside the B/C
-    working set.
+    working set.  ``bytes_per`` is the storage width of the maintained
+    inverses — ``precision_bytes(cfg.precision)`` for the mixed-precision
+    policy (sign/logdet scalars stay fp32 but are counted at ``bytes_per``
+    too; the 4-scalar tail is noise next to the n^2 blocks).
     """
     return n_walkers * bytes_per * (n_up * n_up + n_dn * n_dn + 4)
+
+
+# --- mixed-precision storage policy (DESIGN.md §13) -----------------------
+# The maintained (W, n, n) inverses and CI P-tables may be STORED in a
+# reduced dtype; every sweep upcasts to fp32, accumulates ratios/updates in
+# fp32, and quantizes back at the storage boundary.  Scalars (positions,
+# sign, logdet, energies) always stay fp32.
+PRECISIONS = ('fp32', 'bf16', 'fp16')
+_STORAGE_DTYPES = {'fp32': jnp.float32, 'bf16': jnp.bfloat16,
+                   'fp16': jnp.float16}
+_PRECISION_BYTES = {'fp32': 4, 'bf16': 2, 'fp16': 2}
+# Per-dtype §6/§13 drift contract vs a fresh fp64 recompute between
+# refreshes: (relative Minv error, absolute logdet error).  fp32 keeps the
+# original §6 1e-4 bound; the reduced dtypes are bounded by the storage
+# quantization step (bf16: 8-bit mantissa ~ 4e-3, fp16: 11-bit ~ 5e-4)
+# times a random-walk accumulation factor over the <= sem_refresh * n_e
+# moves between full refreshes — tests/test_precision.py pins these.
+_DRIFT_TOLERANCE = {'fp32': (1e-4, 1e-4), 'bf16': (4e-2, 2e-1),
+                    'fp16': (5e-3, 2.5e-2)}
+
+
+def storage_dtype(precision: str):
+    """Storage dtype of the maintained inverses / P-tables for a policy."""
+    return _STORAGE_DTYPES[precision]
+
+
+def precision_bytes(precision: str) -> int:
+    """Bytes per element of the stored ensemble state for a policy."""
+    return _PRECISION_BYTES[precision]
+
+
+def drift_tolerance(precision: str) -> tuple[float, float]:
+    """(relative Minv, absolute logdet) drift bound vs fp64 recompute."""
+    return _DRIFT_TOLERANCE[precision]

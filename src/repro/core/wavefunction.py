@@ -32,7 +32,22 @@ class WavefunctionConfig:
     n_dn: int
     k_max: int = 0                 # padded active-AO count; 0 -> n_ao (dense)
     shared_orbitals: bool = True   # closed-shell: one MO block for both spins
-    method: str = 'sparse'         # 'dense' | 'sparse' | 'kernel'
+    method: str = 'sparse'         # 'dense' | 'sparse' | 'kernel' |
+    #                                'fused' | 'fused-kernel' (the latter
+    #                                two select the fused-sweep SEM
+    #                                propagator in core/sem.py; the MO
+    #                                product pipeline then follows
+    #                                ``mo_method``)
+    mo_method: str = ''            # MO-product pipeline override for the
+    #                                AO->MO tensor passes ('dense' |
+    #                                'sparse' | 'kernel').  Empty (the
+    #                                default) means: follow ``method``,
+    #                                except the fused sweep methods fall
+    #                                back to 'sparse'.  ``core.sem``
+    #                                records the pre-rewrite method here
+    #                                when building a fused config, so a
+    #                                dense/kernel energy pass survives the
+    #                                propagator rewrite.
     ns_steps: int = 1              # Newton–Schulz refinement of the inverse
     kernel_tiles: tuple = (8, 8, 8)  # (tile_o, tile_k, tile_e); 128s on TPU
     ensemble_eval: bool = True     # VMC/DMC walker batches: one flattened
@@ -59,6 +74,17 @@ class WavefunctionConfig:
     #                                (cutoff = infinity) route back here
     #                                bitwise.  Built ONCE at setup by
     #                                ``screening.build_screening``.
+    precision: str = 'fp32'        # storage policy for the maintained SEM
+    #                                inverses / CI P-tables: 'fp32' | 'bf16'
+    #                                | 'fp16'.  Reduced dtypes store the
+    #                                (W, n, n) state low-width; every sweep
+    #                                upcasts and accumulates ratios/updates
+    #                                in fp32, and the Newton–Schulz
+    #                                corrector + periodic refresh bound the
+    #                                quantization drift per
+    #                                ``slater.drift_tolerance`` (DESIGN.md
+    #                                §13).  'fp32' is bitwise-inert: no
+    #                                casts are inserted at the default.
     ci: object = None              # multidet.MultiDetWavefunction or None
     #                                (single determinant).  When set, the
     #                                Slater tail of every evaluation runs
@@ -114,6 +140,20 @@ def _screening_active(cfg: WavefunctionConfig) -> bool:
     return cfg.screening is not None and not cfg.screening.exhaustive
 
 
+def _mo_product_method(cfg: WavefunctionConfig) -> str:
+    """Resolve the MO-product pipeline ('dense' | 'sparse' | 'kernel').
+
+    ``cfg.mo_method`` wins when set.  The fused sweep methods are
+    propagator selectors, not product pipelines — without an explicit
+    override they use the sparse product (the repo default).
+    """
+    if cfg.mo_method:
+        return cfg.mo_method
+    if cfg.method in ('fused', 'fused-kernel'):
+        return 'sparse'
+    return cfg.method
+
+
 def _mo_tensor_screened(cfg: WavefunctionConfig,
                         params: WavefunctionParams, r_elec: jnp.ndarray,
                         chunk: int = 0):
@@ -130,7 +170,7 @@ def _mo_tensor_screened(cfg: WavefunctionConfig,
     idx, active, count = scr_mod.active_ao_lists(scr, r_elec)
     Bp = aos.eval_ao_block_screened(cfg.basis, params.coords, r_elec, idx,
                                     active)
-    if cfg.method == 'kernel':
+    if _mo_product_method(cfg) == 'kernel':
         from repro.kernels.screened_mo.ops import screened_mo_products
         to, tk, te = cfg.kernel_tiles
         C = screened_mo_products(params.mo, Bp, idx, active, tile_o=to,
@@ -158,12 +198,12 @@ def _mo_tensor(cfg: WavefunctionConfig, params: WavefunctionParams,
     B, atom_active = aos.eval_ao_block(cfg.basis, params.coords, r_elec)
     ao_mask = atom_active[:, jnp.asarray(cfg.basis.ao_atom)]
     count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)
-    if cfg.method == 'kernel':
+    if _mo_product_method(cfg) == 'kernel':
         from repro.kernels.sparse_mo.ops import sparse_mo_products
         to, tk, te = cfg.kernel_tiles
         return sparse_mo_products(params.mo, B, ao_mask, tile_o=to,
                                   tile_k=tk, tile_e=te), count
-    if cfg.method == 'dense' or cfg.k_max <= 0:
+    if _mo_product_method(cfg) == 'dense' or cfg.k_max <= 0:
         return mos.mo_products_dense(params.mo, B), count
     idx, valid, _ = aos.active_ao_indices(cfg.basis, atom_active, cfg.k_max,
                                           ao_mask=ao_mask)
@@ -202,7 +242,7 @@ def _mo_tensor_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
     count = jnp.sum(ao_mask, axis=-1).astype(jnp.int32)         # (W, n_e)
     n_rows = params.mo.shape[0]
 
-    if cfg.method == 'kernel':
+    if _mo_product_method(cfg) == 'kernel':
         from repro.kernels.sparse_mo.ops import (ensemble_tiles,
                                                  sparse_mo_products)
         B2 = jnp.moveaxis(Bw, 0, 1).reshape(Bw.shape[1], W * n_e, 5)
@@ -212,7 +252,7 @@ def _mo_tensor_ensemble(cfg: WavefunctionConfig, params: WavefunctionParams,
                                ao_mask.reshape(W * n_e, -1),
                                tile_o=to, tile_k=tk, tile_e=te)
         return jnp.moveaxis(C.reshape(n_rows, W, n_e, 5), 1, 0), count
-    if cfg.method == 'dense' or cfg.k_max <= 0:
+    if _mo_product_method(cfg) == 'dense' or cfg.k_max <= 0:
         Cw = jnp.einsum('oa,waec->woec', params.mo, Bw,
                         preferred_element_type=jnp.float32)
         return Cw, count

@@ -1,0 +1,104 @@
+"""jit'd wrapper: padding + ref/kernel dispatch for the fused sweep.
+
+``fused_sweep_block`` is the single entry point ``core.sem`` calls per
+spin block.  ``use_kernel=False`` (cfg.method == 'fused') runs the
+``lax.scan`` oracle directly; ``use_kernel=True`` (cfg.method ==
+'fused-kernel') pads the walker axis to the autotuned ``tile_w``
+(padded walkers carry ``logu = +1e30`` so they never accept and pass
+through untouched), pads the matrix/electron lanes to the f32 VMEM tile
+on real TPU (interpret mode has no tiling constraint and skips the
+blow-up), dispatches ``kernel.fused_sweep_call`` and slices back.
+
+The multidet path keeps its table dimensions unpadded (the CI gathers
+index true orbital rows); it is validated under interpret mode like the
+rest of the repo's kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import fused_sweep_call
+from .ref import fused_sweep_ref
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=('offset', 'n_up', 'use_kernel',
+                                             'tile_w', 'interpret'))
+def fused_sweep_block(minv, phi, r, r_prop, en_delta, logu, sign, logdet,
+                      b_ee, ci_ops=None, *, offset, n_up, use_kernel=False,
+                      tile_w=8, interpret=True):
+    """One spin block's fused sweep: scan oracle or Pallas kernel.
+
+    Args:
+      minv: (W, n, n) f32 maintained inverse of THIS block.
+      phi: (W, n_blk, n_cols) proposal MO values (full orbital panel when
+        multidet); r: (W, n_e, 3) current positions (both blocks);
+      r_prop: (W, n_blk, 3); en_delta/logu: (W, n_blk); sign/logdet: (W,).
+      b_ee: () e-e Padé denominator.
+      ci_ops: None or (P, rdet, r_other, holes, parts, coeffs).
+      offset/n_up: static block geometry; use_kernel/tile_w/interpret:
+        static dispatch knobs.
+
+    Returns (r, minv, sign, logdet, P, rdet, accept) with accept a
+    (W, n_blk) bool matrix (move-for-move Metropolis outcomes).
+    """
+    W, n, _ = minv.shape
+    if not use_kernel:
+        P = rdet = None
+        ci_args = None
+        if ci_ops is not None:
+            P, rdet, r_other, holes, parts, coeffs = ci_ops
+            ci_args = (jnp.asarray(holes, jnp.int32),
+                       jnp.asarray(parts, jnp.int32),
+                       jnp.asarray(coeffs, jnp.float32), r_other)
+        (r, minv, sign, logdet, P, rdet), acc = fused_sweep_ref(
+            r, minv, sign, logdet, phi, r_prop, en_delta, logu, b_ee,
+            offset=offset, n_up=n_up, P=P, rdet=rdet, ci_args=ci_args)
+        return r, minv, sign, logdet, P, rdet, acc
+
+    n_e, n_blk, n_cols = r.shape[1], phi.shape[1], phi.shape[2]
+    # real TPU wants the trailing two block dims on the (8, 128) f32 tile;
+    # interpret mode has no constraint — pad only the walker axis there.
+    # CI table gathers index true orbital rows, so the multidet path stays
+    # lane-unpadded (interpret-validated, like multidet_ratio).
+    lane = 128 if (not interpret and ci_ops is None) else 1
+    minv_p = _pad_axis(_pad_axis(minv, 1, lane), 2, lane)
+    phi_p = _pad_axis(_pad_axis(phi, 1, 1), 2, lane)
+    r_p = _pad_axis(_pad_axis(r, 1, lane), 2, lane)
+    rp_p = _pad_axis(r_prop, 2, lane)
+    args = [minv_p, phi_p, r_p, rp_p, en_delta, logu, sign, logdet]
+    args = [_pad_axis(a, 0, tile_w) for a in args]
+    # padded walkers must never accept: +1e30 beats any finite log-ratio
+    args[5] = _pad_axis(logu, 0, tile_w, value=1e30)
+    ci_p = None
+    if ci_ops is not None:
+        P, rdet, r_other, holes, parts, coeffs = ci_ops
+        ci_p = (_pad_axis(P, 0, tile_w), _pad_axis(rdet, 0, tile_w),
+                _pad_axis(r_other, 0, tile_w), holes, parts, coeffs)
+    out = fused_sweep_call(*args, jnp.asarray(b_ee, jnp.float32), ci_p,
+                           offset=offset, n_up=n_up, n_occ=n,
+                           n_e_valid=n_e, tile_w=tile_w,
+                           interpret=interpret)
+    if ci_ops is not None:
+        minv_o, r_o, sign_o, logdet_o, acc, P_o, rdet_o = out
+        P_o, rdet_o = P_o[:W], rdet_o[:W]
+    else:
+        minv_o, r_o, sign_o, logdet_o, acc = out
+        P_o = jnp.zeros((W, 0, 0), minv.dtype)
+        rdet_o = jnp.zeros((W, 0), minv.dtype)
+    return (r_o[:W, :n_e, :3], minv_o[:W, :n, :n], sign_o[:W],
+            logdet_o[:W], P_o, rdet_o, acc[:W].astype(bool))
+
+
+__all__ = ['fused_sweep_block', 'fused_sweep_ref']

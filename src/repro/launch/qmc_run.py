@@ -17,9 +17,12 @@ substrate (paper §V: "all kinds of computational platforms"):
   or remote ``python -m repro.launch.qmc_worker --connect HOST:PORT``)
   attach with heartbeats, reconnect backoff, and work stealing.
 
-``--method vmc|dmc|sem-vmc|opt-vmc`` selects the propagator plug-in
-(``opt-vmc`` runs the outer wavefunction-optimization loop of DESIGN.md
-§10 instead of a single sampling run); ``--shards N``
+``--method vmc|dmc|sem-vmc|opt-vmc|fused-vmc`` selects the propagator
+plug-in (``opt-vmc`` runs the outer wavefunction-optimization loop of
+DESIGN.md §10 instead of a single sampling run; ``fused-vmc`` is the
+single-electron-move sampler with the whole sweep fused into one batched
+dispatch per spin block — DESIGN.md §13 — and honors ``--precision
+fp32|bf16|fp16`` reduced-precision state storage); ``--shards N``
 shards each worker's walker axis over N local devices (DESIGN.md §5).  The
 database IS the checkpoint: re-running with the same --db resumes from the
 stored walker reservoir and keeps appending blocks under the same CRC-32
@@ -42,7 +45,8 @@ def parse_spec(argv=None) -> RunSpec:
     ap.add_argument('--system', default='h2',
                     help='h|h2|heh+|water|smallest|b-strand|...')
     ap.add_argument('--method',
-                    choices=('vmc', 'dmc', 'sem-vmc', 'opt-vmc'),
+                    choices=('vmc', 'dmc', 'sem-vmc', 'opt-vmc',
+                             'fused-vmc'),
                     default='vmc')
     ap.add_argument('--n-det', type=int, default=1,
                     help='CI expansion size (1: single determinant; >1: '
@@ -71,6 +75,14 @@ def parse_spec(argv=None) -> RunSpec:
                          'screening off; 0: drop only exact zeros (bitwise-'
                          'identical estimator, linear-scaling cost); > 0: '
                          'tolerance cutoffs (enters the run key)')
+    ap.add_argument('--precision', choices=('fp32', 'bf16', 'fp16'),
+                    default='fp32',
+                    help='storage policy for the maintained SEM inverses / '
+                         'CI P-tables (DESIGN.md §13).  bf16/fp16 halve '
+                         'the resting ensemble footprint; all ratios and '
+                         'updates still accumulate in fp32 and the drift '
+                         'contract is enforced per dtype.  Non-default '
+                         'values enter the run key')
     ap.add_argument('--db', default=':memory:')
     ap.add_argument('--e-trial', type=float, default=None)
     ap.add_argument('--seed', type=int, default=0)
@@ -111,6 +123,7 @@ def parse_spec(argv=None) -> RunSpec:
     return RunSpec(
         system=args.system, method=args.method, n_det=args.n_det,
         tau=args.tau, screen_eps=args.screen_eps,
+        precision=args.precision,
         e_trial=args.e_trial, n_walkers=args.walkers, steps=args.steps,
         shards=args.shards, backend=args.backend, n_workers=args.workers,
         grid=SimGridConfig(latency=args.sim_latency, drop_rate=args.sim_drop,

@@ -50,6 +50,10 @@ def sampler_from_payload(welcome: dict):
                                n_det=int(spec.get('n_det', 1)),
                                ci_seed=int(spec.get('ci_seed', 0)),
                                screen_eps=(eps if eps >= 0 else None))
+    precision = str(spec.get('precision', 'fp32'))
+    if precision != 'fp32':
+        import dataclasses
+        cfg = dataclasses.replace(cfg, precision=precision)
     prop = make_propagator(spec['method'], cfg, tau=float(spec['tau']),
                            e_trial=spec.get('e_trial'),
                            equil_steps=int(spec.get('equil_steps', 100)))

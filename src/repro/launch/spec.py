@@ -34,9 +34,11 @@ from repro.systems import build_system
 # mirrors the built-in core.driver registrations; kept as a literal so
 # spec construction/validation stays jax-import-free (the registry itself
 # is consulted lazily for tau defaults and propagator construction)
-METHODS = ('vmc', 'dmc', 'sem-vmc', 'opt-vmc')
+METHODS = ('vmc', 'dmc', 'sem-vmc', 'opt-vmc', 'fused-vmc')
 OPT_SOLVERS = ('sr', 'lm')
 BACKEND_NAMES = ('thread', 'process', 'sim', 'grid')
+# mirrors core.slater.PRECISIONS (jax-import-free for the same reason)
+PRECISIONS = ('fp32', 'bf16', 'fp16')
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +67,14 @@ class RunSpec:
     #                                  Negative: screening off (dense path,
     #                                  the historical behavior).  >= 0:
     #                                  critical data — enters the run key.
+    precision: str = 'fp32'          # storage policy for the maintained
+    #                                  SEM inverses / P-tables ('fp32' |
+    #                                  'bf16' | 'fp16'; DESIGN.md §13).
+    #                                  Reduced dtypes quantize the resting
+    #                                  state (fp32 accumulation throughout)
+    #                                  and are critical data — they enter
+    #                                  the run key; 'fp32' keeps
+    #                                  pre-existing keys stable.
 
     # ensemble / shard layout
     n_walkers: int = 32              # walkers per worker (paper: 10-100)
@@ -116,6 +126,9 @@ class RunSpec:
                              f'(choose from {OPT_SOLVERS})')
         if self.opt_steps < 1:
             raise ValueError(f'opt_steps must be >= 1, got {self.opt_steps}')
+        if self.precision not in PRECISIONS:
+            raise ValueError(f'unknown precision {self.precision!r} '
+                             f'(choose from {PRECISIONS})')
 
     def replace(self, **kw) -> 'RunSpec':
         """Functional update (dataclasses.replace convenience)."""
@@ -256,6 +269,8 @@ def build_run(spec: RunSpec, db: ResultDatabase | None = None) -> QMCRun:
     screen_eps = spec.screen_eps if spec.screen_eps >= 0 else None
     cfg, params = build_system(spec.system, n_det=spec.n_det,
                                ci_seed=spec.seed, screen_eps=screen_eps)
+    if spec.precision != 'fp32':
+        cfg = dataclasses.replace(cfg, precision=spec.precision)
     tau = spec.resolved_tau()
     prop = make_propagator(spec.method, cfg, tau=tau, e_trial=spec.e_trial,
                            equil_steps=spec.equil_steps)
@@ -287,10 +302,16 @@ def build_run(spec: RunSpec, db: ResultDatabase | None = None) -> QMCRun:
     screen_key = {}
     if screen_eps is not None and screen_eps > 0:
         screen_key = dict(screen_eps=screen_eps)
+    # reduced-precision storage quantizes the estimator's resting state, so
+    # the policy is critical data; the fp32 default adds no entry, keeping
+    # every pre-existing run key (and database resume) stable.
+    precision_key = {}
+    if spec.precision != 'fp32':
+        precision_key = dict(precision=spec.precision)
     run_key = critical_data_key(
         system=spec.system, method=spec.method, tau=tau,
         mo=np.asarray(params.mo), coords=np.asarray(params.coords),
-        **ci_key, **screen_key)
+        **ci_key, **screen_key, **precision_key)
     if db is None:
         db = ResultDatabase(spec.db)
     db.register_run(run_key, spec=spec_to_payload(spec))
@@ -310,7 +331,8 @@ def build_run(spec: RunSpec, db: ResultDatabase | None = None) -> QMCRun:
             system=spec.system, method=spec.method, n_det=spec.n_det,
             ci_seed=spec.seed, tau=tau, e_trial=spec.e_trial,
             equil_steps=spec.equil_steps, n_walkers=spec.n_walkers,
-            steps=spec.steps, screen_eps=spec.screen_eps))
+            steps=spec.steps, screen_eps=spec.screen_eps,
+            precision=spec.precision))
     mgr = QMCManager(sampler, run_key, control, db=db, seed=spec.seed,
                      backend=backend, n_kept=spec.n_kept)
     return QMCRun(spec=spec, run_key=run_key, cfg=cfg, params=params,

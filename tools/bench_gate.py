@@ -44,6 +44,8 @@ GATES = {
     'XIII': [('exponent', 'max', ('system', 'method'))],
     'XIV': [('vs_single', 'min', ('runs', 'pool')),
             ('fairness', 'min', ('runs', 'pool'))],
+    'XV': [('speedup', 'min', ('system', 'n_elec', 'walkers')),
+           ('mem_ratio', 'max', ('system', 'n_elec', 'precision'))],
 }
 BASELINES = {
     'VI': 'BENCH_ensemble.json',
@@ -53,10 +55,17 @@ BASELINES = {
     'XII': 'BENCH_opt.json',
     'XIII': 'BENCH_scaling.json',
     'XIV': 'BENCH_serve.json',
+    'XV': 'BENCH_fused.json',
 }
 # absolute ceilings enforced on fresh rows regardless of the baseline:
 # the screened pipeline's whole point is sub-quadratic scaling
-HARD_MAX = {('XIII', 'exponent'): {('chain-fit', 'screened'): 2.0}}
+HARD_MAX = {
+    ('XIII', 'exponent'): {('chain-fit', 'screened'): 2.0},
+    # reduced-precision state must actually halve the resting footprint —
+    # these ratios are computed from dtype widths, so no slack at all
+    ('XV', 'mem_ratio'): {('micro-peptide', 60, 'bf16'): 0.5,
+                          ('micro-peptide', 60, 'fp16'): 0.5},
+}
 
 
 def _index(rows, table, keys):
@@ -76,10 +85,12 @@ def compare(table, fresh_rows, base_rows, slack):
     """
     verdicts = []
     for metric, mode, keys in GATES[table]:
-        base = {k: v for k, v in _index(base_rows, table, keys).items()
-                if metric in v}
-        fresh = {k: v for k, v in _index(fresh_rows, table, keys).items()
-                 if metric in v}
+        # drop metric-less rows BEFORE indexing: tables mixing row kinds
+        # (e.g. XV timing vs memory rows) can collide on the identity
+        # columns, and a later metric-less row must not shadow the row
+        # actually carrying the gated metric
+        base = _index([r for r in base_rows if metric in r], table, keys)
+        fresh = _index([r for r in fresh_rows if metric in r], table, keys)
         hard = HARD_MAX.get((table, metric), {})
         if not base:
             verdicts.append(('SKIP', f'{table}/{metric}: no baseline rows'))
@@ -116,7 +127,8 @@ def run_fresh(tables):
     from benchmarks import tables as T
     fns = {'VI': T.table_ensemble, 'VIII': T.table_sem,
            'X': T.table_multidet, 'XI': T.table_grid, 'XII': T.table_opt,
-           'XIII': T.table_scaling, 'XIV': T.table_serve}
+           'XIII': T.table_scaling, 'XIV': T.table_serve,
+           'XV': T.table_fused}
     rows = []
     for tab in tables:
         rows.extend(fns[tab](quick=True))
